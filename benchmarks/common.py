@@ -1,0 +1,72 @@
+"""Shared benchmark scaffolding.
+
+Every benchmark mirrors one table/figure of the paper on the synthetic
+datasets (offline container — DESIGN.md §1) and emits CSV rows
+``name,us_per_call,derived`` where ``derived`` carries the
+table-specific metric (usually accuracy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import DatasetSpec, generate
+from repro.fl import models as pm
+from repro.fl.client import (LocalTrainConfig, compute_projections,
+                             evaluate_classifier, train_classifier)
+
+# benchmark-scale dataset (kept smaller than the paper's 60k MNIST so
+# the whole suite runs on one CPU core; relative orderings preserved)
+BENCH_DATA = DatasetSpec("bench", n_train=8000, n_test=1500, latent=24,
+                         out_dim=784, seed=0)
+MLP = dataclasses.replace(pm.MLP_SPEC, hidden=(200, 100, 50))
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    jax.block_until_ready(jax.tree_util.tree_leaves(out)[0]) \
+        if jax.tree_util.tree_leaves(out) else None
+    return out, (time.time() - t0) * 1e6
+
+
+def train_locals(spec, data, n_clients, beta, *, epochs=6,
+                 same_init=False, seed=0, max_steps=0, proj_alpha=1.0,
+                 max_samples=1536):
+    parts = dirichlet_partition(data["train_y"], n_clients, beta,
+                                seed=seed)
+    clients, projs, local_accs = [], [], []
+    for k, ix in enumerate(parts):
+        init_seed = seed if same_init else seed * 100 + k
+        p0 = pm.init(spec, jax.random.PRNGKey(init_seed))
+        p, _ = train_classifier(
+            spec, p0, data["train_x"][ix], data["train_y"][ix],
+            LocalTrainConfig(epochs=epochs, max_steps=max_steps,
+                             seed=seed + k))
+        clients.append(p)
+        projs.append(compute_projections(
+            spec, p, data["train_x"][ix], alpha=proj_alpha,
+            max_samples=max_samples))
+        local_accs.append(evaluate_classifier(
+            spec, p, data["test_x"], data["test_y"]))
+    return parts, clients, projs, float(np.mean(local_accs))
+
+
+def ensemble_acc(spec, clients, data) -> float:
+    from repro.core.aggregators import ensemble_logits
+    import jax.numpy as jnp
+    x = jnp.asarray(data["test_x"])
+    logits = ensemble_logits(
+        lambda w, xx: pm.forward(spec, w, xx), clients, x)
+    return float(np.mean(np.argmax(np.asarray(logits), -1) ==
+                         data["test_y"]))
+
+
+def row(name: str, us: float, derived) -> str:
+    line = f"{name},{us:.0f},{derived}"
+    print(line, flush=True)
+    return line

@@ -1,0 +1,102 @@
+"""Assemble EXPERIMENTS.md §Dry-run / §Roofline tables from the JSON
+records written by repro.launch.dryrun."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+ARCH_ORDER = ["llama3_8b", "qwen2_1_5b", "whisper_tiny",
+              "falcon_mamba_7b", "phi3_vision_4_2b", "qwen2_moe_a2_7b",
+              "llama3_405b", "zamba2_2_7b", "qwen2_0_5b", "grok1_314b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_records(out_dir="experiments/dryrun"):
+    recs = {}
+    for fn in glob.glob(os.path.join(out_dir, "*.json")):
+        with open(fn) as f:
+            d = json.load(f)
+        recs[(d["arch"], d["shape"], d["mesh"])] = d
+    return recs
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.1f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def markdown_table(recs, mesh="16x16") -> str:
+    lines = [
+        "| arch | shape | status | t_compute | t_memory(model) | "
+        "t_collective | bottleneck | useful_FLOPs | MFU bound | "
+        "HLO-bytes UB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                lines.append(f"| {arch} | {shape} | MISSING | | | | "
+                             "| | | |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | FAIL: "
+                             f"{r['error'][:60]} | | | | | | | |")
+                continue
+            ro = r["roofline"]
+            lines.append(
+                f"| {arch} | {shape} | ok | {fmt_s(ro['t_compute'])} | "
+                f"{fmt_s(ro['t_memory_model'])} | "
+                f"{fmt_s(ro['t_collective'])} | {ro['bottleneck']} | "
+                f"{ro['useful_flops_ratio']:.2f} | "
+                f"{ro['mfu_bound']:.3f} | {fmt_s(ro['t_memory'])} |")
+    return "\n".join(lines)
+
+
+def memory_table(recs, mesh="16x16") -> str:
+    lines = ["| arch | shape | args GB/dev | temps GB/dev | "
+             "collectives (AR/AG/RS/A2A/CP) | compile s |",
+             "|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh))
+            if not r or r["status"] != "ok":
+                continue
+            m = r["memory"]
+            c = r["collectives"]["count"]
+            lines.append(
+                f"| {arch} | {shape} | "
+                f"{(m['argument_bytes'] or 0)/2**30:.2f} | "
+                f"{(m['temp_bytes'] or 0)/2**30:.2f} | "
+                f"{c['all-reduce']}/{c['all-gather']}/"
+                f"{c['reduce-scatter']}/{c['all-to-all']}/"
+                f"{c['collective-permute']} | {r['compile_s']} |")
+    return "\n".join(lines)
+
+
+def run(quick: bool = False):
+    recs = load_records()
+    n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    row("roofline/records", 0, f"ok={n_ok};total={len(recs)}")
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        if r["status"] != "ok":
+            row(f"roofline/{arch}/{shape}/{mesh}", 0, "FAILED")
+            continue
+        ro = r["roofline"]
+        mfu = ro.get("mfu_bound")
+        row(f"roofline/{arch}/{shape}/{mesh}",
+            ro["t_compute"] * 1e6,
+            f"bottleneck={ro['bottleneck']}" +
+            (f";mfu_bound={mfu:.3f}" if mfu is not None else ""))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,...]``
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_kernels, fig4_cvae, fig8_mu,
+                        fig9_multiround, roofline_report,
+                        table1_multimodel, table4_beta_sweep,
+                        table5_local_steps, table6_svd)
+
+SUITES = {
+    "table1": table1_multimodel.run,
+    "table4": table4_beta_sweep.run,
+    "table5": table5_local_steps.run,
+    "table6": table6_svd.run,
+    "fig4": fig4_cvae.run,
+    "fig8": fig8_mu.run,
+    "fig9": fig9_multiround.run,
+    "kernels": bench_kernels.run,
+    "roofline": roofline_report.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+
+    names = (args.only.split(",") if args.only else list(SUITES))
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        import jax
+        jax.clear_caches()       # cap XLA:CPU JIT dylib accumulation
+        t0 = time.time()
+        print(f"# suite {name}", flush=True)
+        try:
+            SUITES[name](quick=args.quick)
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            failures += 1
+            print(f"{name}/SUITE_FAILED,0,{type(e).__name__}: {e}",
+                  flush=True)
+            traceback.print_exc()
+        print(f"# suite {name} done in {time.time()-t0:.0f}s",
+              flush=True)
+    sys.exit(1 if failures else 0)
+
+
+def run_all(quick=True):
+    for fn in SUITES.values():
+        fn(quick=quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Table 1: multi-model one-shot aggregation.
+
+clients ∈ {5, 10, 20} × β ∈ {0.01, 0.1, 0.5}: Local acc / Average /
+OT / MA-Echo / Ensemble, plus elapsed aggregation time (the paper's
+elapsed-time rows; DENSE is out of scope — no server-side training by
+construction of our setting).
+"""
+from __future__ import annotations
+
+from benchmarks.common import (BENCH_DATA, MLP, ensemble_acc, row,
+                               timed, train_locals)
+from repro.core.maecho import MAEchoConfig
+from repro.data.synthetic import generate
+from repro.fl.client import evaluate_classifier
+from repro.fl.server import one_shot_aggregate
+
+
+def run(quick: bool = False):
+    data = generate(BENCH_DATA)
+    spec = MLP
+    client_counts = [5] if quick else [5, 10, 20]
+    betas = [0.01] if quick else [0.01, 0.1, 0.5]
+    import jax
+    for n in client_counts:
+        for beta in betas:
+            jax.clear_caches()
+            parts, clients, projs, local = train_locals(
+                spec, data, n, beta, epochs=4 if quick else 6)
+            accs = {"local": local}
+            times = {}
+            for method in ("fedavg", "ot", "maecho"):
+                kw = {"cfg": MAEchoConfig(tau=30, eta=0.5, mu=20.0)} \
+                    if method == "maecho" else {}
+                g, us = timed(one_shot_aggregate, spec, clients, projs,
+                              method, **kw)
+                accs[method] = evaluate_classifier(
+                    spec, g, data["test_x"], data["test_y"])
+                times[method] = us
+            accs["ensemble"] = ensemble_acc(spec, clients, data)
+            for m in ("local", "fedavg", "ot", "maecho", "ensemble"):
+                row(f"table1/{n}clients/beta{beta}/{m}",
+                    times.get(m, 0.0), f"acc={accs[m]:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Paper Table 5: influence of the number of local SGD steps
+(5-MLP aggregation, diff/same init)."""
+from __future__ import annotations
+
+from benchmarks.common import (BENCH_DATA, MLP, ensemble_acc, row,
+                               timed, train_locals)
+from repro.core.maecho import MAEchoConfig
+from repro.data.synthetic import generate
+from repro.fl.client import evaluate_classifier
+from repro.fl.server import one_shot_aggregate
+
+
+def run(quick: bool = False):
+    data = generate(BENCH_DATA)
+    steps_list = [50, 500] if quick else [20, 50, 100, 500]
+    for same in (False, True):
+        tag = "same" if same else "diff"
+        for steps in steps_list:
+            parts, clients, projs, local = train_locals(
+                MLP, data, 5, 0.01, epochs=99, max_steps=steps,
+                same_init=same)
+            accs = {"local": local}
+            for method in ("fedavg", "maecho"):
+                kw = {"cfg": MAEchoConfig(tau=30, eta=0.5, mu=20.0)} \
+                    if method == "maecho" else {}
+                g, us = timed(one_shot_aggregate, MLP, clients, projs,
+                              method, **kw)
+                accs[method] = evaluate_classifier(
+                    MLP, g, data["test_x"], data["test_y"])
+            accs["ensemble"] = ensemble_acc(MLP, clients, data)
+            for m, a in accs.items():
+                row(f"table5/{tag}/steps{steps}/{m}", 0,
+                    f"acc={a:.4f}")
+
+
+if __name__ == "__main__":
+    run()

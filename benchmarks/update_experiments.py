@@ -1,0 +1,46 @@
+"""Regenerate the dry-run/roofline tables inside EXPERIMENTS.md from
+``experiments/dryrun/*.json``.
+
+  PYTHONPATH=src python -m benchmarks.update_experiments
+"""
+from __future__ import annotations
+
+import re
+
+from benchmarks.roofline_report import (load_records, markdown_table,
+                                        memory_table)
+
+
+def replace_block(text: str, marker: str, content: str) -> str:
+    pattern = rf"<!-- {marker} -->.*?(?=\n## |\Z)"
+    block = f"<!-- {marker} -->\n\n{content}\n"
+    if re.search(pattern, text, flags=re.S):
+        return re.sub(pattern, block, text, flags=re.S)
+    return text
+
+
+def main() -> None:
+    recs = load_records()
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+
+    dry = (
+        "### Compile/memory census — 16×16 (256 chips)\n\n"
+        + memory_table(recs, "16x16")
+        + "\n\n### Compile/memory census — 2×16×16 (512 chips, "
+        "multi-pod)\n\n" + memory_table(recs, "2x16x16"))
+    roof = (
+        "### Single-pod 16×16\n\n" + markdown_table(recs, "16x16")
+        + "\n\n### Multi-pod 2×16×16\n\n"
+        + markdown_table(recs, "2x16x16"))
+
+    text = replace_block(text, "DRYRUN_TABLE", dry)
+    text = replace_block(text, "ROOFLINE_TABLE", roof)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    print(f"EXPERIMENTS.md updated: {n_ok}/{len(recs)} records ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Cross-silo LLM fine-tuning + MA-Echo aggregation (the paper's
+technique as a first-class feature of the LLM framework).
+
+Two silos fine-tune the same (reduced) qwen2-0.5b checkpoint on
+different synthetic token distributions; the server aggregates with
+layer-wise projection matrices captured by the feature probe —
+including the diag token-support rule on the embedding.
+
+  PYTHONPATH=src python examples/llm_finetune_aggregate.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core.maecho import MAEchoConfig
+from repro.core.aggregators import fedavg
+from repro.data.synthetic import lm_token_batches
+from repro.fl.llm_adapter import aggregate_llm, build_projections
+from repro.models.zoo import get_model
+from repro.optim import adamw
+
+
+def finetune(model, params, vocab, *, seed, steps=60, batch=8, seq=64):
+    opt = adamw(1e-3)
+    state = opt.init(params)
+    step_fn = jax.jit(model.make_train_step(opt))
+    for t, b in enumerate(lm_token_batches(vocab, batch, seq, steps,
+                                           seed=seed)):
+        params, state, loss = step_fn(params, state, b, jnp.int32(t))
+    return params, float(loss)
+
+
+def ppl(model, params, vocab, seed, n=5):
+    tot = 0.0
+    for b in lm_token_batches(vocab, 8, 64, n, seed=seed):
+        tot += float(model.loss_fn(params, b))
+    return jnp.exp(tot / n)
+
+
+def main():
+    cfg = get_smoke_config("qwen2-0.5b")
+    model = get_model(cfg)
+    base = model.init_params(jax.random.PRNGKey(0))
+
+    # two silos: different token "domains" (different markov seeds)
+    silos, projs = [], []
+    for i, dom in enumerate((101, 202)):
+        p, loss = finetune(model, base, cfg.vocab, seed=dom)
+        print(f"silo {i}: final local loss {loss:.3f}")
+        probe = list(lm_token_batches(cfg.vocab, 8, 64, 2, seed=dom))
+        silos.append(p)
+        projs.append(build_projections(cfg, p, probe))
+
+    candidates = {
+        "fedavg": fedavg(silos),
+        "maecho": aggregate_llm(cfg, silos, projs,
+                                MAEchoConfig(tau=15, eta=0.5, mu=20.0)),
+    }
+    print(f"{'model':10s} {'ppl@dom0':>9s} {'ppl@dom1':>9s}")
+    for i, p in enumerate(silos):
+        print(f"silo{i:<6d} {ppl(model, p, cfg.vocab, 101):9.2f} "
+              f"{ppl(model, p, cfg.vocab, 202):9.2f}")
+    for name, p in candidates.items():
+        print(f"{name:10s} {ppl(model, p, cfg.vocab, 101):9.2f} "
+              f"{ppl(model, p, cfg.vocab, 202):9.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Multi-round FL with MA-Echo replacing the averaging operator
+(paper §7.4 / Figure 9): faster convergence than FedAvg/FedProx at
+strong label skew.
+
+  PYTHONPATH=src python examples/multiround_fl.py
+"""
+import dataclasses
+
+from repro.core.maecho import MAEchoConfig
+from repro.data.partition import label_shard_partition
+from repro.data.synthetic import MNIST_LIKE, generate
+from repro.fl import models as pm
+from repro.fl.client import LocalTrainConfig
+from repro.fl.rounds import MultiRoundConfig, run_multi_round
+
+
+def main():
+    data = generate(MNIST_LIKE)
+    spec = dataclasses.replace(pm.MLP_SPEC, hidden=(200, 100, 50))
+    n_clients, n_labels = 10, 2
+    parts = label_shard_partition(data["train_y"], n_clients, n_labels,
+                                  seed=0)
+    client_data = [(data["train_x"][ix], data["train_y"][ix])
+                   for ix in parts]
+
+    for method in ("fedavg", "fedprox", "maecho"):
+        cfg = MultiRoundConfig(
+            n_rounds=5, n_clients=n_clients, sample_clients=5,
+            method=method,
+            local=LocalTrainConfig(
+                epochs=3, max_steps=80,
+                fedprox_mu=0.1 if method == "fedprox" else 0.0),
+            maecho=MAEchoConfig(tau=20, eta=0.5, mu=20.0))
+        hist, final = run_multi_round(
+            spec, client_data, (data["test_x"], data["test_y"]), cfg)
+        print(f"{method:8s} " +
+              " ".join(f"{a:.3f}" for a in hist))
+
+
+if __name__ == "__main__":
+    main()

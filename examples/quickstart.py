@@ -1,0 +1,53 @@
+"""Quickstart: one-shot federated aggregation with MA-Echo.
+
+Two clients train MLPs on disjoint halves of a 10-class problem
+(Dirichlet beta=0.01 -> almost no label overlap), then the server
+aggregates WITHOUT any training or public data, exactly the paper's
+setting.  Compare: local models / FedAvg / OT matching / MA-Echo /
+ensemble.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core.maecho import MAEchoConfig
+from repro.data.partition import dirichlet_partition, partition_stats
+from repro.data.synthetic import MNIST_LIKE, generate
+from repro.fl import models as pm
+from repro.fl.client import (LocalTrainConfig, compute_projections,
+                             evaluate_classifier, train_classifier)
+from repro.fl.server import one_shot_aggregate
+
+
+def main():
+    data = generate(MNIST_LIKE)
+    parts = dirichlet_partition(data["train_y"], 2, beta=0.01, seed=0)
+    print("label partition (rows = clients):")
+    print(partition_stats(data["train_y"], parts))
+
+    spec = pm.MLP_SPEC          # the paper's 784-400-200-100-10 MLP
+    clients, projs = [], []
+    for k, ix in enumerate(parts):
+        params = pm.init(spec, jax.random.PRNGKey(k))  # diff init
+        params, _ = train_classifier(
+            spec, params, data["train_x"][ix], data["train_y"][ix],
+            LocalTrainConfig(epochs=10))               # paper recipe
+        acc = evaluate_classifier(spec, params, data["test_x"],
+                                  data["test_y"])
+        print(f"client {k}: global test acc {acc:.3f}")
+        clients.append(params)
+        # the one extra forward epoch: per-layer projection matrices
+        projs.append(compute_projections(spec, params,
+                                         data["train_x"][ix]))
+
+    for method in ("fedavg", "ot", "maecho", "maecho+ot"):
+        kw = {"cfg": MAEchoConfig(tau=30, eta=0.5, mu=20.0)} \
+            if method.startswith("maecho") else {}
+        g = one_shot_aggregate(spec, clients, projs, method, **kw)
+        acc = evaluate_classifier(spec, g, data["test_x"],
+                                  data["test_y"])
+        print(f"{method:12s} -> global acc {acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

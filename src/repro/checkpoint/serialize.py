@@ -1,0 +1,64 @@
+"""msgpack pytree checkpointing (orbax/flax are not available offline).
+
+Format: a dict {"tree": nested structure with leaf descriptors,
+"arrays": list of raw buffers} packed with msgpack; arrays stored as
+(dtype, shape, bytes).  Works for every params/opt-state pytree in the
+framework, including the FL client/server states.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode(tree: Any, arrays: list):
+    if isinstance(tree, dict):
+        return {"__d": {k: _encode(v, arrays) for k, v in tree.items()}}
+    if isinstance(tree, (list, tuple)):
+        return {"__l" if isinstance(tree, list) else "__t":
+                [_encode(v, arrays) for v in tree]}
+    if isinstance(tree, (jnp.ndarray, np.ndarray)):
+        arr = np.asarray(tree)
+        arrays.append(arr.tobytes())
+        return {"__a": [str(arr.dtype), list(arr.shape)]}
+    if isinstance(tree, (int, float, str, bool)) or tree is None:
+        return {"__s": tree}
+    raise TypeError(f"cannot serialise {type(tree)}")
+
+
+def _decode(node: Any, arrays: list, idx: list):
+    if "__d" in node:
+        return {k: _decode(v, arrays, idx) for k, v in node["__d"].items()}
+    if "__l" in node:
+        return [_decode(v, arrays, idx) for v in node["__l"]]
+    if "__t" in node:
+        return tuple(_decode(v, arrays, idx) for v in node["__t"])
+    if "__a" in node:
+        dtype, shape = node["__a"]
+        buf = arrays[idx[0]]
+        idx[0] += 1
+        return jnp.asarray(np.frombuffer(buf, dtype=dtype).reshape(shape))
+    return node["__s"]
+
+
+def save(path: str, tree: Any) -> None:
+    arrays: list = []
+    enc = _encode(tree, arrays)
+    payload = msgpack.packb({"tree": enc, "arrays": arrays},
+                            use_bin_type=True)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(payload)
+    os.replace(tmp, path)
+
+
+def load(path: str) -> Any:
+    with open(path, "rb") as f:
+        obj = msgpack.unpackb(f.read(), raw=False)
+    return _decode(obj["tree"], obj["arrays"], [0])

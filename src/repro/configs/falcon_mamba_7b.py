@@ -1,0 +1,19 @@
+"""falcon-mamba-7b — attention-free Mamba1 [arXiv:2410.05355].
+64 layers, d_model=4096 (d_inner=8192), ssm_state=16, vocab 65024."""
+from repro.configs.common import smoke_reduce
+from repro.models.config import ModelConfig, SSMConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="falcon-mamba-7b", family="ssm",
+        n_layers=64, d_model=4096, n_heads=0, n_kv_heads=0,
+        d_ff=0, vocab=65024,
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2, version=1),
+        microbatches=16,
+        source="arXiv:2410.05355",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return smoke_reduce(config(), n_heads=0, n_kv_heads=0, head_dim=0, d_ff=0)

@@ -1,0 +1,21 @@
+"""grok-1-314b — 8 experts top-2 MoE [hf:xai-org/grok-1].
+64L d_model=6144 48H (GQA kv=8) d_ff=32768/expert vocab=131072.
+fsdp=True: 314B total params require weight sharding over the data
+axis as well (see llama3_405b note)."""
+from repro.configs.common import smoke_reduce
+from repro.models.config import ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="grok-1-314b", family="moe",
+        n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+        d_ff=32768, vocab=131072, head_dim=128,
+        moe=MoEConfig(n_experts=8, top_k=2, n_shared_experts=0,
+                      capacity_factor=1.25),
+        fsdp=True, microbatches=16, source="hf:xai-org/grok-1",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return smoke_reduce(config(), n_heads=4, n_kv_heads=2)

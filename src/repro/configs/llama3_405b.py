@@ -1,0 +1,23 @@
+"""llama3-405b — dense GQA, 128k vocab [arXiv:2407.21783].
+
+fsdp=True: 405B params do not fit a 16-way model shard on 16 GB v5e
+(bf16 alone is 50 GB/chip); weights/optimizer shard over the data axis
+too (ZeRO-3 style), at the cost of per-layer all-gathers — quantified
+in EXPERIMENTS.md §Roofline.
+"""
+from repro.configs.common import smoke_reduce
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-405b", family="dense",
+        n_layers=126, d_model=16384, n_heads=128, n_kv_heads=8,
+        d_ff=53248, vocab=128256, head_dim=128, rope_theta=500000.0,
+        fsdp=True, microbatches=16, seq_shard=True,
+        source="arXiv:2407.21783",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return smoke_reduce(config())

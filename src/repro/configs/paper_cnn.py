@@ -1,0 +1,13 @@
+"""The paper's CIFAR-10 CNN (3 conv + 3 fc), §7."""
+from repro.fl.models import CNN_SPEC, PaperModelSpec
+
+
+def config() -> PaperModelSpec:
+    return CNN_SPEC
+
+
+def smoke_config() -> PaperModelSpec:
+    import dataclasses
+    return dataclasses.replace(
+        CNN_SPEC, in_shape=(8, 8, 3), conv_channels=(8, 8, 8),
+        fc_hidden=(16, 16))

@@ -1,0 +1,11 @@
+"""The paper's conditional VAE (decoder 30 -> 256 -> 512 -> 784), §7.1."""
+from repro.fl.models import CVAE_SPEC, PaperModelSpec
+
+
+def config() -> PaperModelSpec:
+    return CVAE_SPEC
+
+
+def smoke_config() -> PaperModelSpec:
+    import dataclasses
+    return dataclasses.replace(CVAE_SPEC, latent=8, cvae_hidden=(32, 64))

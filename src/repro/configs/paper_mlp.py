@@ -1,0 +1,11 @@
+"""The paper's MNIST MLP (784 -> 400 -> 200 -> 100 -> 10), §7."""
+from repro.fl.models import MLP_SPEC, PaperModelSpec
+
+
+def config() -> PaperModelSpec:
+    return MLP_SPEC
+
+
+def smoke_config() -> PaperModelSpec:
+    import dataclasses
+    return dataclasses.replace(MLP_SPEC, in_shape=(64,), hidden=(32, 16))

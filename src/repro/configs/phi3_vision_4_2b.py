@@ -1,0 +1,20 @@
+"""phi-3-vision-4.2b — phi3-mini LM backbone + stub CLIP frontend
+[hf:microsoft/Phi-3-vision-128k-instruct]. 32L d_model=3072 32H MHA
+(kv=32) d_ff=8192 vocab=32064; vision tokens provided as embeddings."""
+from repro.configs.common import smoke_reduce
+from repro.models.config import ModelConfig, VLMConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="phi-3-vision-4.2b", family="vlm",
+        n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32,
+        d_ff=8192, vocab=32064, head_dim=96,
+        vlm=VLMConfig(n_patches=1024, d_vision=1024),
+        microbatches=8,
+        source="hf:microsoft/Phi-3-vision-128k-instruct",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return smoke_reduce(config(), n_heads=4, n_kv_heads=4)

@@ -1,0 +1,20 @@
+"""qwen2-moe-a2.7b — 4 shared + 60 routed experts, top-4
+[hf:Qwen/Qwen1.5-MoE-A2.7B]. 24L d_model=2048 16H MHA d_ff=1408/expert."""
+from repro.configs.common import smoke_reduce
+from repro.models.config import ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-moe-a2.7b", family="moe",
+        n_layers=24, d_model=2048, n_heads=16, n_kv_heads=16,
+        d_ff=1408, vocab=151936, head_dim=128, qkv_bias=True,
+        moe=MoEConfig(n_experts=60, top_k=4, n_shared_experts=4,
+                      capacity_factor=1.25),
+        microbatches=4,
+        source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return smoke_reduce(config(), n_heads=4, n_kv_heads=4)

@@ -1,0 +1,19 @@
+"""whisper-tiny — enc-dec audio backbone, conv frontend stubbed
+[arXiv:2212.04356]. 4 encoder + 4 decoder layers, d_model=384, 6 heads
+(MHA: kv=6), GELU MLP d_ff=1536, vocab 51865."""
+from repro.configs.common import smoke_reduce
+from repro.models.config import EncDecConfig, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-tiny", family="encdec",
+        n_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+        d_ff=1536, vocab=51865, head_dim=64, tie_embeddings=True,
+        encdec=EncDecConfig(n_enc_layers=4, enc_seq=1500, dec_seq=448),
+        source="arXiv:2212.04356",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return smoke_reduce(config(), n_heads=4, n_kv_heads=4)

@@ -1,0 +1,22 @@
+"""zamba2-2.7b — Mamba2 backbone + shared attention blocks
+[arXiv:2411.15242]. 54 ssm layers (d_model=2560, state=64), one shared
+attn+MLP block (32H MHA, d_ff=10240) invoked every 6 layers."""
+from repro.configs.common import smoke_reduce
+from repro.models.config import HybridConfig, ModelConfig, SSMConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-2.7b", family="hybrid",
+        n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32,
+        d_ff=10240, vocab=32000, head_dim=80,
+        ssm=SSMConfig(d_state=64, d_conv=4, expand=2, version=2,
+                      head_dim=64),
+        hybrid=HybridConfig(attn_every=6),
+        microbatches=8,
+        source="arXiv:2411.15242",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return smoke_reduce(config(), n_heads=4, n_kv_heads=4)

@@ -1,0 +1,8 @@
+# MA-Echo — the paper's primary contribution.
+from repro.core.maecho import MAEchoConfig, maecho_aggregate  # noqa: F401
+from repro.core.projections import (  # noqa: F401
+    projection_from_features, null_projector_from_features,
+    projection_direct, block_update, owm_update, svd_compress, svd_restore,
+)
+from repro.core.qp import solve_qp, project_capped_simplex  # noqa: F401
+from repro.core.aggregators import AGGREGATORS, fedavg  # noqa: F401

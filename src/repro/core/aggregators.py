@@ -1,0 +1,85 @@
+"""Aggregation-operator registry: the paper's method and its baselines.
+
+Every operator maps ``list[client pytree] -> global pytree`` (plus
+side-information where applicable).  These are exactly the columns of
+the paper's tables: FedAvg (vanilla average), OT (neuron matching +
+average), MA-Echo, MA-Echo+OT, and the Ensemble upper-ish bound
+(evaluation-time logit averaging — not a parameter aggregation).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+
+from repro.core import matching
+from repro.core.maecho import MAEchoConfig, maecho_aggregate
+from repro.utils import trees
+
+Pytree = Any
+
+
+def fedavg(client_weights: list[Pytree],
+           sizes: Optional[list[float]] = None) -> Pytree:
+    """Vanilla (size-weighted) parameter average [McMahan et al.]."""
+    n = len(client_weights)
+    w = (jnp.ones(n) / n if sizes is None
+         else jnp.asarray(sizes, jnp.float32) / sum(sizes))
+    out = trees.tree_scale(client_weights[0], w[0])
+    for i in range(1, n):
+        out = trees.tree_add(out, trees.tree_scale(client_weights[i], w[i]))
+    return out
+
+
+def ot_average(client_layers: list[list[dict]],
+               solver: str = "hungarian") -> list[dict]:
+    """Neuron matching to client 0, then average (OTFusion-style).
+
+    Operates on MLP-layout models (list of {"W", "b"} layers).
+    """
+    ref = client_layers[0]
+    aligned = [ref] + [matching.match_mlp(ref, c, solver)
+                       for c in client_layers[1:]]
+    return fedavg(aligned)
+
+
+def maecho(client_weights, projections=None, cfg: MAEchoConfig = None,
+           **kw) -> Pytree:
+    return maecho_aggregate(client_weights, projections,
+                            cfg or MAEchoConfig(), **kw)
+
+
+def maecho_ot(client_layers: list[list[dict]],
+              projections: list[list[dict]],
+              cfg: MAEchoConfig = None, solver: str = "hungarian",
+              **kw):
+    """Paper §5.3: match neurons first, transform projections by
+    P' = TᵀPT, then run Algorithm 1 from the average of the aligned
+    models.  ``projections[i]`` is the per-layer list of
+    {"W": P, "b": scalar} dicts produced by the client."""
+    ref = client_layers[0]
+    aligned = [ref]
+    proj_aligned = [projections[0]]
+    for c, pr in zip(client_layers[1:], projections[1:]):
+        perms = matching.input_perms_for_mlp(ref, c, solver)
+        aligned.append(matching.match_mlp(ref, c, solver))
+        raw = matching.permute_projections([q["W"] for q in pr], perms)
+        proj_aligned.append([{**q, "W": P} for q, P in zip(pr, raw)])
+    return maecho_aggregate(aligned, proj_aligned,
+                            cfg or MAEchoConfig(), **kw)
+
+
+def ensemble_logits(forward: Callable, client_weights: list[Pytree], x):
+    """Evaluation-time ensemble (the paper's performance goal line)."""
+    logits = [jnp.asarray(forward(w, x)) for w in client_weights]
+    probs = [jnp.exp(l - jnp.max(l, axis=-1, keepdims=True)) for l in logits]
+    probs = [p / jnp.sum(p, axis=-1, keepdims=True) for p in probs]
+    return jnp.log(sum(probs) / len(probs) + 1e-12)
+
+
+AGGREGATORS = {
+    "fedavg": fedavg,
+    "ot": ot_average,
+    "maecho": maecho,
+    "maecho+ot": maecho_ot,
+}

@@ -1,0 +1,241 @@
+"""MA-Echo — Algorithm 1 of the paper, as a composable JAX op.
+
+Operates on *pytrees of layers*: each client contributes a pytree of
+weight leaves plus a structurally matching pytree of projection leaves.
+Faithful to the paper:
+
+  W⁽⁰⁾ = init (vanilla average by default);  Vᵢ = Wᵢ
+  repeat τ times, per layer l:
+      Rᵢ  = (W − Vᵢ) Pᵢ                    (residual in client i's row space)
+      α*  = argmin ½‖Σᵢ 2αᵢ Rᵢ‖²  on the capped simplex   (Eq. 6)
+      W  += η · ( −Σᵢ 2αᵢ* Rᵢ )                            (Eq. 7)
+      Vᵢ += Norm( (W − Vᵢ)(I − μ/(1+μ) Pᵢ) )              (Eq. 11)
+
+Projection leaves may be:
+  - 2-D (d_in, d_in): full projector (paper's form);
+  - 1-D matching the in-axis: diagonal projector (used for embedding
+    tables where the input space is the one-hot vocabulary — P is the
+    client's token-support indicator);
+  - scalar 1.0: full-rank "input is always live" projector, the bias /
+    norm-parameter rule (DESIGN.md §4);
+  - any of the above with a leading stacked-layer axis L, matching a
+    weight leaf (L, …) — the scan-over-layers LLM layout.  The QP is
+    then solved per scanned layer (vmap), exactly like the paper's
+    per-layer loop.
+
+Weight-leaf convention: ``convention="oi"`` (paper: W is (out, in), the
+MLP/CNN models) or ``"io"`` (the LLM zoo: x @ W, W is (in, out)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qp import project_capped_simplex
+from repro.utils import trees
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MAEchoConfig:
+    tau: int = 30                 # outer iterations
+    eta: float = 1.0              # step size on W
+    C: float = 1.0                # simplex cap (paper: C ∈ [1/N, 1])
+    mu: float = 1.0               # Eq. 8 penalty; factor μ/(1+μ)
+    norm: bool = False            # Norm(·) row-normalisation of V updates
+    qp_iters: int = 200
+    init: str = "average"         # average | first | random
+    eps: float = 1e-12
+
+
+# --------------------------------------------------------------------------
+# per-leaf algebra
+# --------------------------------------------------------------------------
+def _apply_P(delta, P, convention: str):
+    """delta·P respecting the in-axis convention and P's kind.
+
+    P kinds: scalar (bias rule), 1-D diag (embedding token support),
+    2-D full matrix, or FACTORED {"U": (in, k), "s": (k,)} with
+    P = U·diag(s)·Uᵀ — the beyond-paper optimisation (EXPERIMENTS.md
+    §Perf H3): the Eq. 7 GEMM chain drops from O(out·in²) to
+    O(out·in·k), and communication from in² to in·(k+1) (paper Table 6
+    shows the projectors are low-rank; we keep them factored through
+    the *compute*, not just the wire).
+    """
+    if isinstance(P, dict):                 # factored projector
+        U = P["U"]
+        s = P["s"]
+        if delta.ndim == 1:
+            return ((delta @ U) * s) @ U.T
+        if convention == "oi":
+            return ((delta @ U) * s) @ U.T  # (out,k)·(k)·(k,in)
+        return U @ (s[:, None] * (U.T @ delta))
+    if P.ndim == 0:                         # full projector (bias rule)
+        return delta * P
+    if P.ndim == 1:                         # diagonal projector on in-axis
+        if delta.ndim == 1:
+            return delta * P
+        return delta * (P[None, :] if convention == "oi" else P[:, None])
+    # full matrix projector
+    if delta.ndim == 1:
+        return delta @ P
+    if convention == "oi":
+        return delta @ P                    # (out,in)@(in,in)
+    return P @ delta                        # (in,in)@(in,out)
+
+
+def _leaf_step(W, V, P, cfg: MAEchoConfig, convention: str):
+    """One Algorithm-1 iteration for a single layer leaf.
+
+    W: (...,);  V: (N, ...);  P: (N, [in, in] | [in] | []).
+    Returns (W', V').
+    """
+    N = V.shape[0]
+    R = jax.vmap(lambda v, p: _apply_P(W - v, p, convention))(V, P)  # (N, ...)
+    Rf = R.reshape(N, -1).astype(jnp.float32)
+    G = Rf @ Rf.T                                                  # (N, N)
+
+    # Eq. 6 dual QP via accelerated PGD on the capped simplex (inlined so
+    # the whole aggregation jits as one program).
+    L = jnp.maximum(jnp.max(jnp.sum(jnp.abs(G), axis=1)), 1e-12)
+    step = 1.0 / L
+    a = project_capped_simplex(jnp.full((N,), 1.0 / N, jnp.float32), cfg.C)
+
+    def qp_body(_, state):
+        a, y, t = state
+        a_new = project_capped_simplex(y - step * (G @ y), cfg.C)
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        y_new = a_new + ((t - 1.0) / t_new) * (a_new - a)
+        return a_new, y_new, t_new
+
+    alpha, _, _ = jax.lax.fori_loop(
+        0, cfg.qp_iters, qp_body, (a, a, jnp.float32(1.0)))
+
+    D = -2.0 * jnp.tensordot(alpha, R.astype(jnp.float32), axes=(0, 0))
+    W_new = (W.astype(jnp.float32) + cfg.eta * D).astype(W.dtype)
+
+    # Eq. 11: V_i += Norm((W' − V_i)(I − μ/(1+μ) P_i))
+    frac = cfg.mu / (1.0 + cfg.mu)
+
+    def v_update(v, p):
+        delta = W_new - v
+        U = delta - frac * _apply_P(delta, p, convention)
+        if cfg.norm:
+            ax = -1 if convention == "oi" else 0
+            nrm = jnp.linalg.norm(
+                U.astype(jnp.float32), axis=ax, keepdims=True)
+            U = U / jnp.maximum(nrm, cfg.eps).astype(U.dtype)
+        return v + U
+
+    V_new = jax.vmap(v_update)(V, P)
+    return W_new, V_new
+
+
+def _dispatch_leaf(W, V, P, cfg: MAEchoConfig, convention: str,
+                   levels: int = 0):
+    """``levels`` leading stacked-layer axes are vmapped away; the QP is
+    then solved per scanned layer, matching the paper's per-layer loop."""
+    if levels > 0:
+        # V/P: (N, L, ...) -> vmap over L (axis 1 of V/P, axis 0 of W)
+        return jax.vmap(
+            lambda w, v, p: _dispatch_leaf(w, v, p, cfg, convention,
+                                           levels - 1),
+            in_axes=(0, 1, 1), out_axes=(0, 1))(W, V, P)
+    return _leaf_step(W, V, P, cfg, convention)
+
+
+# --------------------------------------------------------------------------
+# full aggregation
+# --------------------------------------------------------------------------
+def default_projections(client_weights: list[Pytree]) -> list[Pytree]:
+    """Scalar full projectors everywhere (degenerates MA-Echo toward a
+    consensus pull; used when a leaf has no feature statistics)."""
+    return [trees.tree_map(lambda x: jnp.ones((), x.dtype), w)
+            for w in client_weights]
+
+
+def init_global(client_weights: list[Pytree], how: str,
+                rng: Optional[jax.Array] = None) -> Pytree:
+    n = len(client_weights)
+    if how == "average":
+        out = client_weights[0]
+        for w in client_weights[1:]:
+            out = trees.tree_add(out, w)
+        return trees.tree_scale(out, 1.0 / n)
+    if how == "first":
+        return trees.tree_map(lambda x: x, client_weights[0])
+    if how == "random":
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        leaves, treedef = jax.tree_util.tree_flatten(client_weights[0])
+        keys = jax.random.split(rng, len(leaves))
+        new = [jax.random.normal(k, x.shape, x.dtype) *
+               (jnp.std(x) + 1e-8) for k, x in zip(keys, leaves)]
+        return jax.tree_util.tree_unflatten(treedef, new)
+    raise ValueError(f"unknown init {how!r}")
+
+
+@partial(jax.jit, static_argnames=("cfg", "convention", "levels"))
+def _maecho_jit(W0, V0, P, cfg: MAEchoConfig, convention: str,
+                levels: tuple):
+    def outer(_, state):
+        W, V = state
+        flatW, treedef = jax.tree_util.tree_flatten(W)
+        flatV = treedef.flatten_up_to(V)
+        flatP = treedef.flatten_up_to(P)
+        out = [_dispatch_leaf(w, v, p, cfg, convention, lv)
+               for w, v, p, lv in zip(flatW, flatV, flatP, levels)]
+        W = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        V = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+        return W, V
+
+    if cfg.tau <= 4:
+        # unrolled (also gives the roofline probe loop-free HLO)
+        state = (W0, V0)
+        for t in range(cfg.tau):
+            state = outer(t, state)
+        return state
+    W, V = jax.lax.fori_loop(0, cfg.tau, outer, (W0, V0))
+    return W, V
+
+
+def maecho_aggregate(
+    client_weights: list[Pytree],
+    projections: Optional[list[Pytree]] = None,
+    cfg: MAEchoConfig = MAEchoConfig(),
+    convention: str = "oi",
+    init_point: Optional[Pytree] = None,
+    rng: Optional[jax.Array] = None,
+    stack_levels=None,
+    return_anchors: bool = False,
+):
+    """Run Algorithm 1.  Returns the global model pytree.
+
+    client_weights: list over clients of structurally identical pytrees.
+    projections:    matching list of projector pytrees (see module doc);
+                    ``None`` falls back to scalar full projectors.
+    stack_levels:   per-leaf count of leading stacked-layer axes —
+                    ``None`` (all 0, the paper's MLP/CNN layout), a
+                    pytree of ints matching the weights, or a callable
+                    ``path -> int`` (the LLM scan-over-layers layout).
+    """
+    if projections is None:
+        projections = default_projections(client_weights)
+    W0 = (init_point if init_point is not None
+          else init_global(client_weights, cfg.init, rng))
+    if stack_levels is None:
+        levels_tree = trees.tree_map(lambda _: 0, W0)
+    elif callable(stack_levels):
+        levels_tree = trees.map_with_path(
+            lambda path, _: stack_levels(path), W0)
+    else:
+        levels_tree = stack_levels
+    levels = tuple(jax.tree_util.tree_leaves(levels_tree))
+    V0 = trees.tree_map(lambda *xs: jnp.stack(xs, 0), *client_weights)
+    P = trees.tree_map(lambda *xs: jnp.stack(xs, 0), *projections)
+    W, V = _maecho_jit(W0, V0, P, cfg, convention, levels)
+    return (W, V) if return_anchors else W

@@ -1,0 +1,125 @@
+"""Neuron-matching baselines (paper §4 Eq. 1) and the MA-Echo+OT combo.
+
+Cross-model neuron alignment: per layer, find a permutation T minimising
+‖W_ref − T·W_i‖²_F (rows = output neurons), propagate the permutation
+into the next layer's input dimension, and average the re-aligned
+models.  This covers the behaviour of OTFusion [19] / FedMA-style [20]
+hard matching used as the paper's strongest parameter-space baseline.
+
+Combination with MA-Echo (paper §5.3): after matching, projections
+transform as P' = T*ᵀ P T* — implemented in :func:`permute_projections`.
+
+The assignment problem is solved with scipy's Hungarian solver on host
+(matching is a pre-processing step, not part of the lowered program);
+a Sinkhorn-based soft matcher is provided for fully-jitted pipelines.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _pairwise_sq_dists(A, B):
+    """(n, d), (n, d) -> (n, n) squared euclidean distances."""
+    a2 = np.sum(A * A, axis=1)[:, None]
+    b2 = np.sum(B * B, axis=1)[None, :]
+    return a2 + b2 - 2.0 * (A @ B.T)
+
+
+def match_layer(W_ref, W_i) -> np.ndarray:
+    """Permutation π with W_i[π] ≈ W_ref (rows = output neurons).
+
+    Returns the row-index array: aligned = W_i[π].
+    """
+    from scipy.optimize import linear_sum_assignment
+
+    cost = _pairwise_sq_dists(np.asarray(W_ref, np.float64),
+                              np.asarray(W_i, np.float64))
+    rows, cols = linear_sum_assignment(cost)
+    perm = np.empty(len(rows), dtype=np.int64)
+    perm[rows] = cols
+    return perm
+
+
+def sinkhorn_match_layer(W_ref, W_i, reg: float = 0.05,
+                         iters: int = 200) -> np.ndarray:
+    """Entropic OT + hardening — jnp-only alternative to Hungarian."""
+    cost = _pairwise_sq_dists(np.asarray(W_ref, np.float64),
+                              np.asarray(W_i, np.float64))
+    cost = cost / (cost.max() + 1e-12)
+    K = np.exp(-cost / reg)
+    u = np.ones(cost.shape[0])
+    for _ in range(iters):
+        v = 1.0 / (K.T @ u + 1e-30)
+        u = 1.0 / (K @ v + 1e-30)
+    T = u[:, None] * K * v[None, :]
+    # harden greedily
+    perm = np.full(cost.shape[0], -1, dtype=np.int64)
+    taken = np.zeros(cost.shape[0], dtype=bool)
+    order = np.argsort(-T.max(axis=1))
+    for r in order:
+        cands = np.argsort(-T[r])
+        for c in cands:
+            if not taken[c]:
+                perm[r] = c
+                taken[c] = True
+                break
+    return perm
+
+
+def match_mlp(ref_layers: list[dict], layers: list[dict],
+              solver: str = "hungarian") -> list[dict]:
+    """Align one MLP-style client (list of {"W": (out,in), "b"}) to a
+    reference, permuting each hidden layer's outputs and the next
+    layer's inputs.  The final (classifier) layer is not permuted."""
+    fn = match_layer if solver == "hungarian" else sinkhorn_match_layer
+    aligned = [dict(lay) for lay in layers]
+    in_perm: Optional[np.ndarray] = None
+    for idx, lay in enumerate(aligned):
+        W = np.asarray(lay["W"])
+        if in_perm is not None:
+            W = W[:, in_perm]
+        if idx < len(aligned) - 1:
+            ref = np.asarray(ref_layers[idx]["W"])
+            perm = fn(ref, W)
+            W = W[perm]
+            b = np.asarray(lay["b"])[perm]
+            in_perm = perm
+        else:
+            b = np.asarray(lay["b"])
+            in_perm = None
+        aligned[idx] = {**lay, "W": jnp.asarray(W), "b": jnp.asarray(b)}
+    return aligned
+
+
+def permute_projections(proj_layers: list, perms: list) -> list:
+    """P' = T*ᵀ P T* (paper §5.3): reindex each projector by the input
+    permutation applied to its layer."""
+    out = []
+    for P, perm in zip(proj_layers, perms):
+        if perm is None or P.ndim == 0:
+            out.append(P)
+        elif P.ndim == 1:
+            out.append(P[perm])
+        else:
+            out.append(P[np.ix_(perm, perm)])
+    return out
+
+
+def input_perms_for_mlp(ref_layers: list[dict], layers: list[dict],
+                        solver: str = "hungarian") -> list:
+    """The input-side permutation experienced by each layer after
+    output-matching the previous one (first layer: identity/None)."""
+    fn = match_layer if solver == "hungarian" else sinkhorn_match_layer
+    perms: list = [None]
+    in_perm: Optional[np.ndarray] = None
+    for idx, lay in enumerate(layers[:-1]):
+        W = np.asarray(lay["W"])
+        if in_perm is not None:
+            W = W[:, in_perm]
+        perm = fn(np.asarray(ref_layers[idx]["W"]), W)
+        perms.append(perm)
+        in_perm = perm
+    return perms

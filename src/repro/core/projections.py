@@ -1,0 +1,147 @@
+"""Null-space projection matrices (paper §4 "Null space projection").
+
+For a layer with input features X ∈ R^{n×d}, the row-space projector is
+
+    P = Xᵀ (X Xᵀ + zI)⁻¹ X ∈ R^{d×d}
+
+ΔW projected by (I − P) leaves the layer's input→output map unchanged
+on the training data — the mechanism MA-Echo uses to keep the global
+model from forgetting each client.
+
+Computing P via the n×n Gram inverse is infeasible for n ≫ d, so —
+exactly as the paper does, citing OWM [40] — we maintain the
+*orthogonal* projector Q ≈ (I − P) with a recursive-least-squares
+update and recover P = I − Q:
+
+    rank-1 (OWM):   Q ← Q − (Q x)(Q x)ᵀ / (α + xᵀ Q x)
+    block  (ours):  Q ← Q − Q X_bᵀ (α I_b + X_b Q X_bᵀ)⁻¹ X_b Q
+
+The block form is the TPU adaptation (DESIGN.md §6): a b×b solve plus
+GEMMs instead of n sequential rank-1 vector updates; both are exact
+applications of Woodbury and agree to numerical precision.  The Pallas
+kernel in ``repro.kernels.projection_update`` implements the block
+update with explicit VMEM tiling; ``ref.py`` points back here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def projection_direct(X, z: float = 1e-3):
+    """P = Xᵀ(XXᵀ + zI)⁻¹X — only for small n (tests / tiny layers)."""
+    n = X.shape[0]
+    G = X @ X.T + z * jnp.eye(n, dtype=X.dtype)
+    return X.T @ jnp.linalg.solve(G, X)
+
+
+def null_projector_init(d: int, dtype=jnp.float32):
+    """Q₀ = I (empty feature set: every direction is null space)."""
+    return jnp.eye(d, dtype=dtype)
+
+
+def owm_update(Q, x, alpha: float = 1e-3):
+    """Rank-1 RLS update with one feature vector x ∈ R^d."""
+    qx = Q @ x
+    return Q - jnp.outer(qx, qx) / (alpha + x @ qx)
+
+
+def block_update(Q, Xb, alpha: float = 1e-3):
+    """Block-RLS update with a batch X_b ∈ R^{b×d} (Woodbury, exact)."""
+    QX = Q @ Xb.T                                  # (d, b)
+    S = alpha * jnp.eye(Xb.shape[0], dtype=Q.dtype) + Xb @ QX
+    return Q - QX @ jnp.linalg.solve(S, QX.T)
+
+
+def null_projector_from_features(X, alpha: float = 1e-3,
+                                 block: int = 128):
+    """Stream X through block-RLS updates.  Returns Q ≈ I − P."""
+    n, d = X.shape
+    pad = (-n) % block
+    Xp = jnp.pad(X, ((0, pad), (0, 0)))
+    nb = Xp.shape[0] // block
+    blocks = Xp.reshape(nb, block, d)
+    # padded rows are zero vectors: block_update with zero rows is a no-op
+    Q = null_projector_init(d, X.dtype)
+
+    def step(Q, Xb):
+        return block_update(Q, Xb, alpha), None
+
+    Q, _ = jax.lax.scan(step, Q, blocks)
+    return Q
+
+
+def null_projector_from_features_continue(Q, X, alpha: float = 1e-3,
+                                          block: int = 128):
+    """Continue an existing Q with more feature rows (streaming use)."""
+    n, d = X.shape
+    pad = (-n) % block
+    Xp = jnp.pad(X, ((0, pad), (0, 0)))
+    blocks = Xp.reshape(Xp.shape[0] // block, block, d)
+
+    def step(Q, Xb):
+        return block_update(Q, Xb, alpha), None
+
+    Q, _ = jax.lax.scan(step, Q, blocks)
+    return Q
+
+
+def projection_from_features(X, alpha: float = 1e-3, block: int = 128):
+    """P (row-space projector) via the streaming block form."""
+    d = X.shape[-1]
+    return jnp.eye(d, dtype=X.dtype) - null_projector_from_features(
+        X, alpha, block)
+
+
+def symmetrize(P):
+    return 0.5 * (P + P.T)
+
+
+# --------------------------------------------------------------------------
+# SVD compression (paper §7.3 "The SVD decomposition for P")
+# --------------------------------------------------------------------------
+def svd_compress(P, k: int):
+    """Keep the top-k eigencomponents of the (symmetric PSD) projector.
+
+    Returns (U_k, s_k) with P ≈ U_k diag(s_k) U_kᵀ.  Communication cost
+    drops from d² to k·(d+1) — the paper's Table 6 experiment.
+    """
+    s, U = jnp.linalg.eigh(symmetrize(P))
+    idx = jnp.argsort(s)[::-1][:k]
+    return U[:, idx], s[idx]
+
+
+def svd_restore(U_k, s_k):
+    return (U_k * s_k) @ U_k.T
+
+
+def compression_ratio(d: int, k: int) -> float:
+    return (k * (d + 1)) / float(d * d)
+
+
+def factor_projection(P, k: int) -> dict:
+    """Factored form {"U", "s"} with P ≈ U·diag(s)·Uᵀ — accepted
+    directly by ``core.maecho`` (the beyond-paper compute optimisation;
+    EXPERIMENTS.md §Perf H3)."""
+    U, s = svd_compress(P, k)
+    return {"U": U, "s": s}
+
+
+def factor_projection_tree(projs, k: int, min_dim: int = 4):
+    """Factor every full (d,d) projector leaf in a projection pytree."""
+    import jax
+
+    def walk(node):
+        if isinstance(node, dict):
+            if set(node) == {"U", "s"}:
+                return node
+            return {kk: walk(v) for kk, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = type(node)
+            return t(walk(v) for v in node)
+        if hasattr(node, "ndim") and node.ndim == 2 and \
+                node.shape[0] == node.shape[1] and node.shape[0] >= min_dim:
+            return factor_projection(node, min(k, node.shape[0]))
+        return node
+
+    return walk(projs)

@@ -1,0 +1,170 @@
+"""Client-side FL: local training to convergence + projection-matrix
+estimation (the one extra forward epoch the paper budgets in §6).
+
+The client API is model-family agnostic: it works for the paper's
+MLP/CNN/CVAE (``repro.fl.models``) and, through the same projection
+machinery, for the LLM zoo (see ``repro.fl.llm_adapter``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import projections as proj
+from repro.fl import models as pm
+from repro.models.layers import softmax_xent
+from repro.optim import Optimizer, sgd
+from repro.utils import trees
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalTrainConfig:
+    epochs: int = 10
+    batch_size: int = 64
+    lr: float = 0.01
+    momentum: float = 0.5         # the paper's client recipe (§7.1)
+    max_steps: int = 0            # 0 = epochs * steps_per_epoch
+    fedprox_mu: float = 0.0       # FedProx proximal term (baseline)
+    seed: int = 0
+
+
+def _batches(x, y, bs, rng):
+    n = len(x)
+    order = rng.permutation(n)
+    for s in range(0, n - bs + 1, bs):
+        ix = order[s:s + bs]
+        yield jnp.asarray(x[ix]), jnp.asarray(y[ix])
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_step(spec: pm.PaperModelSpec, cfg: LocalTrainConfig,
+                 use_anchor: bool):
+    """One jitted train step per (spec, cfg) — a fresh @jax.jit closure
+    per client call exhausts XLA:CPU's JIT dylib budget after ~100
+    clients (benchmarks run hundreds of local trainings per process)."""
+    opt = sgd(cfg.lr, cfg.momentum)
+
+    def loss_fn(p, bx, by, anchor):
+        logits = pm.forward(spec, p, bx)
+        l = softmax_xent(logits, by)
+        if use_anchor and cfg.fedprox_mu > 0:
+            sq = trees.tree_dot(trees.tree_sub(p, anchor),
+                                trees.tree_sub(p, anchor))
+            l = l + 0.5 * cfg.fedprox_mu * sq
+        return l
+
+    @jax.jit
+    def step(p, s, bx, by, t, anchor):
+        l, g = jax.value_and_grad(loss_fn)(p, bx, by, anchor)
+        p, s = opt.update(g, s, p, t)
+        return p, s, l
+
+    return opt, step
+
+
+def train_classifier(spec: pm.PaperModelSpec, params, x, y,
+                     cfg: LocalTrainConfig,
+                     anchor=None) -> tuple:
+    """SGD local training.  ``anchor`` enables the FedProx term.
+    Returns (params, final_loss)."""
+    opt, step_anchor = _jitted_step(spec, cfg, anchor is not None)
+    opt_state = opt.init(params)
+    anchor_arg = anchor if anchor is not None else params
+
+    def step(p, s, bx, by, t):
+        return step_anchor(p, s, bx, by, t, anchor_arg)
+
+    rng = np.random.RandomState(cfg.seed)
+    t, loss = 0, jnp.float32(0)
+    for _ in range(cfg.epochs):
+        for bx, by in _batches(x, y, cfg.batch_size, rng):
+            params, opt_state, loss = step(params, opt_state, bx, by, t)
+            t += 1
+            if cfg.max_steps and t >= cfg.max_steps:
+                return params, float(loss)
+    return params, float(loss)
+
+
+@functools.lru_cache(maxsize=32)
+def _jitted_forward(spec: pm.PaperModelSpec):
+    return jax.jit(lambda p, bx: pm.forward(spec, p, bx))
+
+
+def evaluate_classifier(spec: pm.PaperModelSpec, params, x, y,
+                        batch: int = 512) -> float:
+    fwd = _jitted_forward(spec)
+    correct = 0
+    n = (len(x) // batch) * batch or len(x)
+    for s in range(0, n, batch):
+        logits = fwd(params, jnp.asarray(x[s:s + batch]))
+        correct += int(jnp.sum(jnp.argmax(logits, -1) ==
+                               jnp.asarray(y[s:s + batch])))
+    return correct / n
+
+
+# --------------------------------------------------------------------------
+# projection estimation (one forward epoch, streaming block-RLS)
+# --------------------------------------------------------------------------
+def compute_projections(spec: pm.PaperModelSpec, params, x,
+                        alpha: float = 1.0, batch: int = 256,
+                        max_samples: int = 2048):
+    """Per-layer projectors onto the span of layer-input features.
+
+    Returns a pytree structurally matching ``params`` where each "W"
+    projector is the (d_in, d_in) row-space matrix P and each "b"
+    projector is the scalar full rule (DESIGN.md §4).
+
+    ``alpha`` (the paper's z) is the energy floor: with row-normalised
+    features, only directions carrying >~alpha total squared energy are
+    captured by P.  alpha=1.0 keeps P concentrated on the dominant
+    feature subspace — the regime the paper's Table 6 SVD-compression
+    results show their projectors live in (EXPERIMENTS.md §Calibration
+    has the sweep; alpha=1e-3 saturates P to full rank and collapses
+    MA-Echo toward vanilla averaging).
+    """
+    n = min(len(x), max_samples)
+    xs = x[:n]
+    if n == 0:
+        # a client with no data contributes no feature constraints:
+        # zero rows are RLS no-ops, so P comes out as the zero matrix
+        xs = np.zeros((1,) + tuple(x.shape[1:]), np.float32)
+        n = 1
+
+    # collect per-layer null projectors Q, then P = I - Q
+    Qs: Optional[list] = None
+    for s in range(0, n, batch):
+        bx = jnp.asarray(xs[s:s + batch])
+        _, feats = pm.forward(spec, params, bx, return_features=True)
+        if Qs is None:
+            Qs = [proj.null_projector_init(f.shape[-1]) for f in feats]
+        for i, f in enumerate(feats):
+            f2 = f.reshape(-1, f.shape[-1])
+            # normalise feature scale for conditioning
+            f2 = f2 / jnp.maximum(jnp.linalg.norm(f2, axis=-1,
+                                                  keepdims=True), 1e-6)
+            Qs[i] = proj.null_projector_from_features_continue(
+                Qs[i], f2, alpha)
+    Ps = [proj.symmetrize(jnp.eye(Q.shape[0]) - Q) for Q in Qs]
+
+    out = [{"W": Ps[i], "b": jnp.ones(())}
+           for i in range(len(_layer_list(spec, params)))]
+    return _relist(spec, params, out)
+
+
+def _layer_list(spec, params):
+    if spec.kind == "cvae":
+        return params["dec"]
+    return params
+
+
+def _relist(spec, params, entries):
+    if spec.kind == "cvae":
+        return {"dec": entries}
+    return entries

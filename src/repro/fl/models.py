@@ -1,0 +1,194 @@
+"""The paper's experiment models: MLP, CNN, CVAE decoder.
+
+Exactly the shapes used in MA-Echo's experiments:
+  - MLP 784 -> 400 -> 200 -> 100 -> 10 (MNIST, §7)
+  - CNN: three conv layers + three fully-connected layers (CIFAR-10)
+  - CVAE decoder 30 -> 256 -> 512 -> 784 (§7.1, Figure 4)
+
+These are the units MA-Echo aggregates.  Layers are kept as explicit
+(W, b) pairs because the algorithm is layer-wise: ``layer_weights``
+yields the 2-D matrices (conv kernels reshaped to out×(in·h·w), as in
+the paper §5.2) together with their input-feature extractors used for
+projection-matrix estimation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperModelSpec:
+    name: str
+    kind: str                      # mlp | cnn | cvae
+    in_shape: tuple
+    n_classes: int = 10
+    hidden: tuple = (400, 200, 100)
+    conv_channels: tuple = (32, 64, 64)
+    fc_hidden: tuple = (256, 128)
+    latent: int = 30
+    cvae_hidden: tuple = (256, 512)
+
+
+MLP_SPEC = PaperModelSpec("paper-mlp", "mlp", (784,))
+CNN_SPEC = PaperModelSpec("paper-cnn", "cnn", (32, 32, 3))
+CVAE_SPEC = PaperModelSpec("paper-cvae", "cvae", (794,))  # latent 30 + y 10 -> 784
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+def mlp_init(spec: PaperModelSpec, rng):
+    dims = (spec.in_shape[0],) + spec.hidden + (spec.n_classes,)
+    params = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        rng, k = jax.random.split(rng)
+        W = jax.random.normal(k, (b, a)) * jnp.sqrt(2.0 / a)
+        params.append({"W": W, "b": jnp.zeros((b,))})
+    return params
+
+
+def mlp_forward(params, x, *, return_features: bool = False):
+    """x: (B, 784).  Returns logits (and per-layer input features)."""
+    feats = []
+    h = x
+    for i, lay in enumerate(params):
+        feats.append(h)
+        h = h @ lay["W"].T + lay["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return (h, feats) if return_features else h
+
+
+# --------------------------------------------------------------------------
+# CNN (3 conv + 3 fc, CIFAR-10 shaped)
+# --------------------------------------------------------------------------
+def cnn_init(spec: PaperModelSpec, rng):
+    H, W, Cin = spec.in_shape
+    params = []
+    c_prev = Cin
+    for c in spec.conv_channels:
+        rng, k = jax.random.split(rng)
+        params.append({
+            "W": jax.random.normal(k, (c, c_prev, 3, 3)) *
+            jnp.sqrt(2.0 / (c_prev * 9)),
+            "b": jnp.zeros((c,)),
+        })
+        c_prev = c
+    # after three stride-2 3x3 convs: H/8 x W/8 x c
+    flat = (H // 8) * (W // 8) * c_prev
+    dims = (flat,) + spec.fc_hidden + (spec.n_classes,)
+    for a, b in zip(dims[:-1], dims[1:]):
+        rng, k = jax.random.split(rng)
+        params.append({
+            "W": jax.random.normal(k, (b, a)) * jnp.sqrt(2.0 / a),
+            "b": jnp.zeros((b,)),
+        })
+    return params
+
+
+def _conv2d(x, W, b, stride=2):
+    # x: (B, H, W, C); W: (Cout, Cin, kh, kw)
+    y = jax.lax.conv_general_dilated(
+        x, W.transpose(2, 3, 1, 0), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def cnn_forward(params, x, *, return_features: bool = False):
+    """x: (B, H, W, C)."""
+    feats = []
+    h = x
+    i = 0
+    for lay in params:
+        if lay["W"].ndim == 4:
+            # feature for projection: im2col patches (B*h*w, Cin*9)
+            feats.append(_im2col(h, 3))
+            h = jax.nn.relu(_conv2d(h, lay["W"], lay["b"]))
+        else:
+            if h.ndim == 4:
+                h = h.reshape(h.shape[0], -1)
+            feats.append(h)
+            h = h @ lay["W"].T + lay["b"]
+            i += 1
+            if i < 3:
+                h = jax.nn.relu(h)
+    return (h, feats) if return_features else h
+
+
+def _im2col(x, k):
+    """Extract kxk patches with stride 2, SAME padding -> (N, C*k*k)."""
+    B, H, W, C = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    rows = []
+    for di in range(k):
+        for dj in range(k):
+            rows.append(xp[:, di:di + H:2, dj:dj + W:2, :])
+    patches = jnp.stack(rows, axis=-1)         # (B, H/2, W/2, C, k*k)
+    return patches.reshape(-1, C * k * k)
+
+
+# --------------------------------------------------------------------------
+# CVAE (decoder is the aggregated part; encoder used for local training)
+# --------------------------------------------------------------------------
+def cvae_init(spec: PaperModelSpec, rng):
+    ks = jax.random.split(rng, 8)
+    d_in = 784 + spec.n_classes
+
+    def lin(k, a, b):
+        return {"W": jax.random.normal(k, (b, a)) * jnp.sqrt(2.0 / a),
+                "b": jnp.zeros((b,))}
+
+    return {
+        "enc": [lin(ks[0], d_in, 512), lin(ks[1], 512, 256)],
+        "mu": lin(ks[2], 256, spec.latent),
+        "logvar": lin(ks[3], 256, spec.latent),
+        "dec": [lin(ks[4], spec.latent + spec.n_classes, 256),
+                lin(ks[5], 256, 512), lin(ks[6], 512, 784)],
+    }
+
+
+def cvae_decode(dec_params, z, y_onehot, *, return_features: bool = False):
+    h = jnp.concatenate([z, y_onehot], axis=-1)
+    feats = []
+    for i, lay in enumerate(dec_params):
+        feats.append(h)
+        h = h @ lay["W"].T + lay["b"]
+        if i < len(dec_params) - 1:
+            h = jax.nn.relu(h)
+    h = jax.nn.sigmoid(h)
+    return (h, feats) if return_features else h
+
+
+def cvae_elbo(params, x, y_onehot, rng):
+    h = jnp.concatenate([x, y_onehot], axis=-1)
+    for lay in params["enc"]:
+        h = jax.nn.relu(h @ lay["W"].T + lay["b"])
+    mu = h @ params["mu"]["W"].T + params["mu"]["b"]
+    logvar = h @ params["logvar"]["W"].T + params["logvar"]["b"]
+    eps = jax.random.normal(rng, mu.shape)
+    z = mu + jnp.exp(0.5 * logvar) * eps
+    xhat = cvae_decode(params["dec"], z, y_onehot)
+    rec = jnp.sum(jnp.square(x - xhat), axis=-1)
+    kl = -0.5 * jnp.sum(1 + logvar - mu ** 2 - jnp.exp(logvar), axis=-1)
+    return jnp.mean(rec + kl)
+
+
+FORWARD: dict[str, Callable] = {
+    "mlp": mlp_forward, "cnn": cnn_forward,
+}
+
+INIT: dict[str, Callable] = {
+    "mlp": mlp_init, "cnn": cnn_init, "cvae": cvae_init,
+}
+
+
+def init(spec: PaperModelSpec, rng):
+    return INIT[spec.kind](spec, rng)
+
+
+def forward(spec: PaperModelSpec, params, x, **kw):
+    return FORWARD[spec.kind](params, x, **kw)

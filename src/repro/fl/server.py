@@ -1,0 +1,86 @@
+"""Server-side one-shot aggregation orchestration (no training — the
+paper's setting).  Handles the conv-kernel reshape (paper §5.2:
+``(C_out, C_in, h, w) -> (C_out, C_in·h·w)``) so the layer-wise
+algebra in ``repro.core`` only ever sees 2-D weight leaves.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import aggregators
+from repro.core.maecho import MAEchoConfig
+from repro.fl import models as pm
+from repro.utils import trees
+
+
+def _flatten_convs(params):
+    shapes = {}
+
+    def walk(layers):
+        out = []
+        for i, lay in enumerate(layers):
+            if lay["W"].ndim == 4:
+                c = lay["W"].shape[0]
+                shapes[i] = lay["W"].shape
+                out.append({**lay, "W": lay["W"].reshape(c, -1)})
+            else:
+                out.append(lay)
+        return out
+
+    if isinstance(params, dict) and "dec" in params:
+        return {"dec": walk(params["dec"])}, shapes
+    return walk(params), shapes
+
+
+def _unflatten_convs(params, shapes):
+    def walk(layers):
+        out = []
+        for i, lay in enumerate(layers):
+            if i in shapes:
+                out.append({**lay, "W": lay["W"].reshape(shapes[i])})
+            else:
+                out.append(lay)
+        return out
+
+    if isinstance(params, dict) and "dec" in params:
+        return {"dec": walk(params["dec"])}
+    return walk(params)
+
+
+def one_shot_aggregate(
+    spec: pm.PaperModelSpec,
+    client_params: list,
+    projections: Optional[list] = None,
+    method: str = "maecho",
+    cfg: MAEchoConfig = None,
+    **kw,
+):
+    """Run one aggregation operator.  ``client_params`` in model layout
+    (conv weights 4-D); projections from ``fl.client.compute_projections``.
+    """
+    flat, shapes = zip(*[_flatten_convs(p) for p in client_params])
+    shapes = shapes[0]
+    flat = list(flat)
+
+    if method == "fedavg":
+        out = aggregators.fedavg(flat)
+    elif method == "ot":
+        layers = [f if isinstance(f, list) else f["dec"] for f in flat]
+        out = aggregators.ot_average(layers)
+        if not isinstance(flat[0], list):
+            out = {"dec": out}
+    elif method == "maecho":
+        out = aggregators.maecho(flat, projections, cfg, **kw)
+    elif method == "maecho+ot":
+        layers = [f if isinstance(f, list) else f["dec"] for f in flat]
+        projs = [p if isinstance(p, list) else p["dec"]
+                 for p in projections]
+        out_layers = aggregators.maecho_ot(layers, projs, cfg, **kw)
+        out = (out_layers if isinstance(flat[0], list)
+               else {"dec": out_layers})
+    else:
+        raise ValueError(f"unknown method {method!r}")
+
+    return _unflatten_convs(out, shapes)

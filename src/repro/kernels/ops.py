@@ -1,0 +1,56 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only; the
+TPU launch path is the same call with ``interpret=False``.  Shapes that
+don't meet the kernels' block-multiple requirements fall back to the
+jnp oracle (recorded in the returned aux when ``debug=True``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.maecho_update import maecho_update
+from repro.kernels.rank_update import block_rls_update, rank_downdate
+
+__all__ = [
+    "flash_attention", "maecho_update", "rank_downdate",
+    "block_rls_update", "maecho_update_auto", "flash_attention_auto",
+]
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def maecho_update_auto(W, V, P, alpha, *, eta: float = 1.0,
+                       block: int = 128, interpret: bool = True):
+    """Kernel when 128-alignable (after padding), oracle otherwise."""
+    out_d, in_d = W.shape
+    if out_d < block or in_d < block:
+        return ref.maecho_update_ref(W, V, P, alpha, eta)
+    Wp, po = _pad_to(W, block, 0)
+    Wp, pi = _pad_to(Wp, block, 1)
+    if po or pi:
+        Vp, _ = _pad_to(_pad_to(V, block, 1)[0], block, 2)
+        Pp, _ = _pad_to(_pad_to(P, block, 1)[0], block, 2)
+    else:
+        Vp, Pp = V, P
+    out = maecho_update(Wp, Vp, Pp, alpha, eta=eta, bo=block, bi=block,
+                        bk=block, interpret=interpret)
+    return out[:out_d, :in_d]
+
+
+def flash_attention_auto(q, k, v, *, causal: bool = True, bq: int = 256,
+                         bk: int = 256, interpret: bool = True):
+    if q.shape[1] % min(bq, q.shape[1]) or k.shape[1] % min(bk, k.shape[1]):
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    return flash_attention(q, k, v, causal=causal,
+                           bq=min(bq, q.shape[1]), bk=min(bk, k.shape[1]),
+                           interpret=interpret)

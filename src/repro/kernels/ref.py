@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.projections import block_update as _block_update
+from repro.models.layers import chunked_attention as _chunked_attention
+
+
+def maecho_update_ref(W, V, P, alpha, eta: float = 1.0):
+    """W' = W + η·(−Σᵢ 2αᵢ (W − Vᵢ) Pᵢ) — Eq. 7, direct einsum form."""
+    R = jnp.einsum("noi,nij->noj", W[None] - V, P)
+    D = -2.0 * jnp.einsum("n,noi->oi", alpha, R)
+    return W + eta * D
+
+
+def rank_downdate_ref(Q, U, A):
+    return Q - U @ A @ U.T
+
+
+def block_rls_update_ref(Q, Xb, alpha: float = 1.0):
+    return _block_update(Q, Xb, alpha)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    return _chunked_attention(q, k, v, causal=causal,
+                              q_chunk=min(128, q.shape[1]),
+                              k_chunk=min(128, k.shape[1]))

@@ -1,0 +1,188 @@
+"""Dry-run of the PAPER'S OP itself: MA-Echo aggregation as a
+distributed program on the production mesh.
+
+The server-side Algorithm-1 step over N client checkpoints of an
+assigned architecture: V/P stacked over clients (sharded over the
+``data`` axis — client-parallel), weight dims sharded over ``model``
+exactly like the training params.  Lowered + compiled + roofline'd like
+the 40 standard pairs; this is the "most representative of the paper's
+technique" hillclimb target in EXPERIMENTS.md §Perf.
+
+  PYTHONPATH=src python -m repro.launch.dryrun_agg --arch llama3-8b \
+      [--clients 8] [--multipod]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.maecho import MAEchoConfig, _maecho_jit  # noqa: E402
+from repro.fl.llm_adapter import stack_levels_fn  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.zoo import get_model  # noqa: E402
+from repro.roofline import analysis as rl  # noqa: E402
+from repro.sharding.rules import make_rules  # noqa: E402
+from repro.utils import trees  # noqa: E402
+
+
+def build_agg(arch: str, n_clients: int, mesh, tau: int,
+              rank: int = 0):
+    cfg = get_config(arch)
+    model = get_model(cfg)
+    rules = make_rules(mesh, cfg)
+    levels_fn = stack_levels_fn(cfg)
+    pspecs = model.param_specs()
+    sds = jax.ShapeDtypeStruct
+
+    def v_spec(path, leaf):
+        return sds((n_clients,) + leaf.shape, jnp.float32)
+
+    def p_spec(path, leaf):
+        lv = levels_fn(path)
+        lead = leaf.shape[:lv]
+        if path == "embed":
+            return sds((n_clients,) + (leaf.shape[0],), jnp.float32)
+        if leaf.ndim - lv == 2:       # matmul weight: full projector
+            d_in = leaf.shape[lv]     # "io" convention
+            if rank:                  # factored P = U diag(s) U^T (H3)
+                k = min(rank, d_in)
+                return {"U": sds((n_clients,) + lead + (d_in, k),
+                                 jnp.float32),
+                        "s": sds((n_clients,) + lead + (k,),
+                                 jnp.float32)}
+            return sds((n_clients,) + lead + (d_in, d_in), jnp.float32)
+        return sds((n_clients,) + lead, jnp.float32)  # scalar rule
+
+    W0 = trees.tree_map(lambda l: sds(l.shape, jnp.float32), pspecs)
+    V0 = trees.map_with_path(v_spec, pspecs)
+    Pp = trees.map_with_path(p_spec, pspecs)
+    levels = tuple(lv for _, lv in
+                   [(p, levels_fn(p)) for p, _ in trees.tree_paths(W0)])
+
+    def w_sh(path, leaf):
+        return NamedSharding(mesh, rules.param_spec(path, leaf.shape))
+
+    def v_sh(path, leaf):
+        base = rules.param_spec(path, leaf.shape[1:])
+        return NamedSharding(mesh, P(*(("data",) + tuple(base))))
+
+    def p_sh(path, leaf):
+        if path.endswith(".U") and leaf.ndim >= 3:
+            mids = (None,) * (leaf.ndim - 3)
+            spec = ("data",) + mids + (
+                "model" if leaf.shape[-2] % 16 == 0 else None, None)
+            return NamedSharding(mesh, P(*spec))
+        if not path.endswith((".U", ".s")) and leaf.ndim >= 3:
+            mids = (None,) * (leaf.ndim - 3)
+            spec = ("data",) + mids + (
+                "model" if leaf.shape[-2] % 16 == 0 else None, None)
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P(*(("data",) +
+                                       (None,) * (leaf.ndim - 1))))
+
+    shardings = (trees.map_with_path(w_sh, W0),
+                 trees.map_with_path(v_sh, V0),
+                 trees.map_with_path(p_sh, Pp))
+
+    macfg = MAEchoConfig(tau=tau, eta=0.5, qp_iters=50)
+
+    def step(W, V, Pr):
+        return _maecho_jit(W, V, Pr, macfg, "io", levels)
+
+    return step, (W0, V0, Pp), shardings, cfg
+
+
+def run(arch: str, n_clients: int, multi_pod: bool,
+        out_dir: str = "experiments/dryrun", rank: int = 0) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tag = f"aggregate_N{n_clients}" + (f"_rank{rank}" if rank else "")
+    rec = {"arch": arch, "shape": tag,
+           "mesh": mesh_name, "status": "ok", "kind": "aggregate",
+           "rank": rank}
+    t0 = time.time()
+    try:
+        costs = {}
+        for tau in (1, 2):
+            step, args, sh, cfg = build_agg(arch, n_clients, mesh, tau,
+                                            rank)
+            with mesh:
+                compiled = jax.jit(
+                    step, in_shardings=sh).lower(*args).compile()
+            cost = compiled.cost_analysis()
+            coll = rl.collective_bytes(compiled.as_text())
+            costs[tau] = (float(cost.get("flops", 0)),
+                          float(cost.get("bytes accessed", 0)),
+                          float(coll["weighted_total"]))
+            if tau == 2:
+                mem = compiled.memory_analysis()
+        per_iter = [costs[2][i] - costs[1][i] for i in range(3)]
+        total_tau = 30
+        tot = [costs[1][i] + per_iter[i] * (total_tau - 1)
+               for i in range(3)]
+        chips = mesh.devices.size
+        # "model flops" for the op: the Eq.7 GEMM chain = 2·Σ_l N·out·in²
+        n_p = get_config(arch).n_params()
+        rec.update({
+            "compile_s": round(time.time() - t0, 1),
+            "tau": total_tau,
+            "per_iter": {"flops": per_iter[0], "bytes": per_iter[1],
+                         "coll": per_iter[2]},
+            "total": {"flops": tot[0], "bytes": tot[1], "coll": tot[2]},
+            "memory": {"argument_bytes": getattr(
+                mem, "argument_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None)},
+            "roofline": {
+                "t_compute": tot[0] / rl.PEAK_FLOPS,
+                "t_memory_hlo": tot[1] / rl.HBM_BW,
+                "t_collective": tot[2] / chips / rl.ICI_BW,
+                "chips": chips, "n_clients": n_clients,
+            },
+        })
+        b = rec["roofline"]
+        b["bottleneck"] = max(
+            [("compute", b["t_compute"]),
+             ("memory", b["t_memory_hlo"]),
+             ("collective", b["t_collective"])], key=lambda kv: kv[1])[0]
+        print(f"[ok] aggregate {arch} N={n_clients} {mesh_name} "
+              f"compile {rec['compile_s']}s "
+              f"bottleneck={b['bottleneck']} "
+              f"t=({b['t_compute']:.2f},{b['t_memory_hlo']:.2f},"
+              f"{b['t_collective']:.2f})s")
+    except Exception as e:  # noqa: BLE001
+        rec.update({"status": "error",
+                    "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-1500:]})
+        print(f"[FAIL] aggregate {arch}: {type(e).__name__}: {e}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(
+            out_dir, f"{arch}_{tag}_{mesh_name}.json"), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_8b")
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--rank", type=int, default=0,
+                    help="factored-P rank (0 = full projectors)")
+    args = ap.parse_args()
+    rec = run(args.arch, args.clients, args.multipod, rank=args.rank)
+    raise SystemExit(0 if rec["status"] == "ok" else 1)
+
+
+if __name__ == "__main__":
+    main()

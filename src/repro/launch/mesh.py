@@ -1,0 +1,33 @@
+"""Production mesh factory.
+
+Defined as FUNCTIONS (not module constants) so importing this module
+never touches jax device state; the dry-run driver sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any
+jax import, and smoke tests/benches see the real single device.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16×16 = 256 chips per pod; 2 pods = 512 when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devs)} — run "
+            "under the dry-run driver (repro.launch.dryrun) which forces "
+            "512 host platform devices")
+    return jax.make_mesh(shape, axes, devices=devs[:need])
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1) -> Mesh:
+    """Tiny mesh over however many devices exist (tests)."""
+    devs = jax.devices()[: n_data * n_model]
+    return Mesh(np.asarray(devs).reshape(n_data, n_model),
+                ("data", "model"))

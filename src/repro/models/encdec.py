@@ -1,0 +1,295 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The mel-spectrogram + conv feature extractor is the allowed STUB:
+``input_specs`` supplies precomputed frame embeddings (B, S_enc, d).
+Everything downstream — bidirectional encoder, causal decoder with
+cross attention, learned positional embeddings, GELU MLPs, pre-LN with
+biases (whisper uses LayerNorm, not RMSNorm) — is implemented.
+
+Decode: self-attention ring-buffer cache of ``seq_len`` (mechanical per
+the assigned decode shapes) + precomputed cross K/V from the encoder.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def _mha_init(rng, cfg: ModelConfig, n_layers: int, cross: bool = False):
+    d, hd = cfg.d_model, cfg.hd()
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(rng, 4)
+
+    def stk(k, a, b):
+        kk = jax.random.split(k, n_layers)
+        return jnp.stack([L.dense_init(q, a, b, cfg.pdtype) for q in kk])
+
+    pre = "x" if cross else ""
+    return {
+        f"w{pre}q": stk(ks[0], d, Hq * hd),
+        f"w{pre}k": stk(ks[1], d, Hkv * hd),
+        f"w{pre}v": stk(ks[2], d, Hkv * hd),
+        f"w{pre}o": stk(ks[3], Hq * hd, d),
+        f"b{pre}q": jnp.zeros((n_layers, Hq * hd), cfg.pdtype),
+        f"b{pre}v": jnp.zeros((n_layers, Hkv * hd), cfg.pdtype),
+        f"b{pre}o": jnp.zeros((n_layers, d), cfg.pdtype),
+    }
+
+
+def _mlp_init(rng, cfg: ModelConfig, n_layers: int):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 2)
+
+    def stk(k, a, b):
+        kk = jax.random.split(k, n_layers)
+        return jnp.stack([L.dense_init(q, a, b, cfg.pdtype) for q in kk])
+
+    return {
+        "w_in": stk(ks[0], d, f), "b_in": jnp.zeros((n_layers, f), cfg.pdtype),
+        "w_out": stk(ks[1], f, d), "b_out": jnp.zeros((n_layers, d), cfg.pdtype),
+    }
+
+
+def _ln_init(n_layers: int, d: int, dtype, name: str):
+    return {f"{name}_g": jnp.ones((n_layers, d), dtype),
+            f"{name}_b": jnp.zeros((n_layers, d), dtype)}
+
+
+def init_params(cfg: ModelConfig, rng):
+    e = cfg.encdec
+    d = cfg.d_model
+    ks = jax.random.split(rng, 8)
+    enc_layers = {
+        **_ln_init(e.n_enc_layers, d, cfg.pdtype, "ln1"),
+        **_ln_init(e.n_enc_layers, d, cfg.pdtype, "ln2"),
+        **_mha_init(ks[0], cfg, e.n_enc_layers),
+        **_mlp_init(ks[1], cfg, e.n_enc_layers),
+    }
+    dec_layers = {
+        **_ln_init(cfg.n_layers, d, cfg.pdtype, "ln1"),
+        **_ln_init(cfg.n_layers, d, cfg.pdtype, "ln2"),
+        **_ln_init(cfg.n_layers, d, cfg.pdtype, "ln3"),
+        **_mha_init(ks[2], cfg, cfg.n_layers),
+        **_mha_init(ks[3], cfg, cfg.n_layers, cross=True),
+        **_mlp_init(ks[4], cfg, cfg.n_layers),
+    }
+    return {
+        "embed": L.embed_init(ks[5], cfg.vocab, d, cfg.pdtype),
+        "dec_pos": (jax.random.normal(ks[6], (e.dec_seq, d)) * 0.01
+                    ).astype(cfg.pdtype),
+        "enc_layers": enc_layers,
+        "dec_layers": dec_layers,
+        "ln_enc_g": jnp.ones((d,), cfg.pdtype),
+        "ln_enc_b": jnp.zeros((d,), cfg.pdtype),
+        "ln_f_g": jnp.ones((d,), cfg.pdtype),
+        "ln_f_b": jnp.zeros((d,), cfg.pdtype),
+    }
+
+
+def _mha(lp, xq, xkv, cfg: ModelConfig, *, causal, pre="",
+         kv_override=None):
+    B, Sq, _ = xq.shape
+    hd = cfg.hd()
+    q = (xq @ lp[f"w{pre}q"].astype(cfg.cdtype)
+         + lp[f"b{pre}q"].astype(cfg.cdtype))
+    q = q.reshape(B, Sq, cfg.n_heads, hd)
+    if kv_override is not None:
+        k, v = kv_override
+    else:
+        k = xkv @ lp[f"w{pre}k"].astype(cfg.cdtype)
+        v = (xkv @ lp[f"w{pre}v"].astype(cfg.cdtype)
+             + lp[f"b{pre}v"].astype(cfg.cdtype))
+        k = k.reshape(B, xkv.shape[1], cfg.n_kv_heads, hd)
+        v = v.reshape(B, xkv.shape[1], cfg.n_kv_heads, hd)
+    o = L.chunked_attention(q, k, v, causal=causal,
+                            q_chunk=cfg.attn_chunk_q,
+                            k_chunk=cfg.attn_chunk_k,
+                            unroll=cfg.unroll_layers)
+    return (o.reshape(B, Sq, cfg.n_heads * hd) @
+            lp[f"w{pre}o"].astype(cfg.cdtype)
+            + lp[f"b{pre}o"].astype(cfg.cdtype))
+
+
+def encode(cfg: ModelConfig, params, audio_embeds):
+    """audio_embeds: (B, S_enc, d) from the stub conv frontend."""
+    x = audio_embeds.astype(cfg.cdtype)
+    S = x.shape[1]
+    # sinusoidal positions (whisper encoder)
+    d = cfg.d_model
+    pos = jnp.arange(S)[:, None]
+    idx = jnp.arange(d // 2)[None]
+    ang = pos / jnp.power(10000.0, 2 * idx / d)
+    x = x + jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
+                            axis=-1).astype(cfg.cdtype)
+
+    def body(x, lp):
+        h = L.layer_norm(x, lp["ln1_g"], lp["ln1_b"], cfg.norm_eps)
+        x = x + _mha(lp, h, h, cfg, causal=False)
+        h = L.layer_norm(x, lp["ln2_g"], lp["ln2_b"], cfg.norm_eps)
+        x = x + L.gelu_mlp(h, lp["w_in"].astype(cfg.cdtype),
+                           lp["b_in"].astype(cfg.cdtype),
+                           lp["w_out"].astype(cfg.cdtype),
+                           lp["b_out"].astype(cfg.cdtype))
+        return x, None
+
+    body_ = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_, x, params["enc_layers"],
+                        unroll=cfg.encdec.n_enc_layers
+                        if cfg.unroll_layers else 1)
+    return L.layer_norm(x, params["ln_enc_g"], params["ln_enc_b"],
+                        cfg.norm_eps)
+
+
+def decode_train(cfg: ModelConfig, params, tokens, enc_out):
+    x = params["embed"].astype(cfg.cdtype)[tokens]
+    S = tokens.shape[1]
+    x = x + params["dec_pos"].astype(cfg.cdtype)[:S]
+
+    def body(x, lp):
+        h = L.layer_norm(x, lp["ln1_g"], lp["ln1_b"], cfg.norm_eps)
+        x = x + _mha(lp, h, h, cfg, causal=True)
+        h = L.layer_norm(x, lp["ln2_g"], lp["ln2_b"], cfg.norm_eps)
+        x = x + _mha(lp, h, enc_out, cfg, causal=False, pre="x")
+        h = L.layer_norm(x, lp["ln3_g"], lp["ln3_b"], cfg.norm_eps)
+        x = x + L.gelu_mlp(h, lp["w_in"].astype(cfg.cdtype),
+                           lp["b_in"].astype(cfg.cdtype),
+                           lp["w_out"].astype(cfg.cdtype),
+                           lp["b_out"].astype(cfg.cdtype))
+        return x, None
+
+    body_ = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_, x, params["dec_layers"], unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    x = L.layer_norm(x, params["ln_f_g"], params["ln_f_b"], cfg.norm_eps)
+    return x @ params["embed"].astype(cfg.cdtype).T
+
+
+def forward(cfg: ModelConfig, params, batch):
+    enc_out = encode(cfg, params, batch["audio_embeds"])
+    return decode_train(cfg, params, batch["tokens"], enc_out)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    return L.softmax_xent(forward(cfg, params, batch), batch["labels"],
+                          batch.get("loss_mask"))
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    """Encode audio + run the decoder prompt; returns (last_logits,
+    cache) with self-attn K/V of the prompt placed in the ring buffer
+    and cross K/V precomputed from the encoder output."""
+    enc_out = encode(cfg, params, batch["audio_embeds"])
+    xk, xv = precompute_cross_cache(cfg, params, enc_out)
+    tokens = batch["tokens"]
+    B, Sd = tokens.shape
+    x = params["embed"].astype(cfg.cdtype)[tokens]
+    x = x + params["dec_pos"].astype(cfg.cdtype)[:Sd]
+    hd = cfg.hd()
+
+    def body(x, scanned):
+        lp, xk_l, xv_l = scanned
+        h = L.layer_norm(x, lp["ln1_g"], lp["ln1_b"], cfg.norm_eps)
+        q = (h @ lp["wq"].astype(cfg.cdtype) + lp["bq"].astype(cfg.cdtype)
+             ).reshape(B, Sd, cfg.n_heads, hd)
+        k = (h @ lp["wk"].astype(cfg.cdtype)).reshape(B, Sd,
+                                                      cfg.n_kv_heads, hd)
+        v = (h @ lp["wv"].astype(cfg.cdtype) + lp["bv"].astype(cfg.cdtype)
+             ).reshape(B, Sd, cfg.n_kv_heads, hd)
+        o = L.chunked_attention(q, k, v, causal=True,
+                                q_chunk=cfg.attn_chunk_q,
+                                k_chunk=cfg.attn_chunk_k,
+                                unroll=cfg.unroll_layers)
+        x = x + (o.reshape(B, Sd, cfg.n_heads * hd)
+                 @ lp["wo"].astype(cfg.cdtype) + lp["bo"].astype(cfg.cdtype))
+        h = L.layer_norm(x, lp["ln2_g"], lp["ln2_b"], cfg.norm_eps)
+        x = x + _mha(lp, h, None, cfg, causal=False, pre="x",
+                     kv_override=(xk_l, xv_l))
+        h = L.layer_norm(x, lp["ln3_g"], lp["ln3_b"], cfg.norm_eps)
+        x = x + L.gelu_mlp(h, lp["w_in"].astype(cfg.cdtype),
+                           lp["b_in"].astype(cfg.cdtype),
+                           lp["w_out"].astype(cfg.cdtype),
+                           lp["b_out"].astype(cfg.cdtype))
+        return x, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["dec_layers"], xk, xv),
+                               unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    x = L.layer_norm(x[:, -1:], params["ln_f_g"], params["ln_f_b"],
+                     cfg.norm_eps)
+    logits = x @ params["embed"].astype(cfg.cdtype).T
+    return logits, {"k": ks, "v": vs, "xk": xk, "xv": xv}
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, window: int):
+    nL, hd, e = cfg.n_layers, cfg.hd(), cfg.encdec
+    kv = lambda s: jnp.zeros((nL, batch, s, cfg.n_kv_heads, hd), cfg.cdtype)
+    return {"k": kv(window), "v": kv(window),
+            "xk": kv(e.enc_seq), "xv": kv(e.enc_seq)}
+
+
+def precompute_cross_cache(cfg: ModelConfig, params, enc_out):
+    """Project encoder output to per-layer cross K/V once."""
+    hd = cfg.hd()
+    B, S, _ = enc_out.shape
+
+    def per_layer(lp):
+        k = (enc_out @ lp["wxk"].astype(cfg.cdtype)
+             ).reshape(B, S, cfg.n_kv_heads, hd)
+        v = (enc_out @ lp["wxv"].astype(cfg.cdtype)
+             + lp["bxv"].astype(cfg.cdtype)
+             ).reshape(B, S, cfg.n_kv_heads, hd)
+        return k, v
+
+    ks, vs = jax.vmap(per_layer)(
+        {k: params["dec_layers"][k] for k in ("wxk", "wxv", "bxv")})
+    return ks, vs
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, position):
+    x = params["embed"].astype(cfg.cdtype)[token]
+    e = cfg.encdec
+    pos_clip = jnp.minimum(position, e.dec_seq - 1)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["dec_pos"].astype(cfg.cdtype), pos_clip, 1, axis=0)
+    hd = cfg.hd()
+
+    def body(x, scanned):
+        lp, kc, vc, xk, xv = scanned
+        B = x.shape[0]
+        # self attention against ring buffer
+        h = L.layer_norm(x, lp["ln1_g"], lp["ln1_b"], cfg.norm_eps)
+        q = (h @ lp["wq"].astype(cfg.cdtype) + lp["bq"].astype(cfg.cdtype)
+             ).reshape(B, 1, cfg.n_heads, hd)
+        k = (h @ lp["wk"].astype(cfg.cdtype)).reshape(B, 1, cfg.n_kv_heads, hd)
+        v = (h @ lp["wv"].astype(cfg.cdtype) + lp["bv"].astype(cfg.cdtype)
+             ).reshape(B, 1, cfg.n_kv_heads, hd)
+        newc, valid = L.update_kv_cache({"k": kc, "v": vc}, k, v, position)
+        o = L.decode_attention(q, newc["k"], newc["v"], valid)
+        x = x + (o.reshape(B, 1, cfg.n_heads * hd)
+                 @ lp["wo"].astype(cfg.cdtype) + lp["bo"].astype(cfg.cdtype))
+        # cross attention against precomputed encoder K/V
+        h = L.layer_norm(x, lp["ln2_g"], lp["ln2_b"], cfg.norm_eps)
+        q = (h @ lp["wxq"].astype(cfg.cdtype) + lp["bxq"].astype(cfg.cdtype)
+             ).reshape(B, 1, cfg.n_heads, hd)
+        valid_x = jnp.ones((xk.shape[0], xk.shape[1]), bool)
+        o = L.decode_attention(q, xk, xv, valid_x)
+        x = x + (o.reshape(B, 1, cfg.n_heads * hd)
+                 @ lp["wxo"].astype(cfg.cdtype) + lp["bxo"].astype(cfg.cdtype))
+        # mlp
+        h = L.layer_norm(x, lp["ln3_g"], lp["ln3_b"], cfg.norm_eps)
+        x = x + L.gelu_mlp(h, lp["w_in"].astype(cfg.cdtype),
+                           lp["b_in"].astype(cfg.cdtype),
+                           lp["w_out"].astype(cfg.cdtype),
+                           lp["b_out"].astype(cfg.cdtype))
+        return x, (newc["k"], newc["v"])
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]), unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    x = L.layer_norm(x, params["ln_f_g"], params["ln_f_b"], cfg.norm_eps)
+    logits = x @ params["embed"].astype(cfg.cdtype).T
+    return logits, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"]}

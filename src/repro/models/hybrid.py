@@ -1,0 +1,239 @@
+"""Zamba2-style hybrid: mamba2 backbone + shared attention block(s).
+
+arXiv:2411.15242 — a stack of mamba2 layers with a small number of
+*shared* (weight-tied) attention blocks invoked periodically.  We scan
+over groups: each group applies one shared-attn call followed by
+``attn_every`` stacked mamba2 layers; the shared block's weights are
+broadcast (not scanned), preserving the weight tying.
+
+MA-Echo applicability: the shared block is a single tensor set —
+aggregated once with its own projection; mamba matmuls aggregate per
+layer; diagonal SSM params (A_log, D, dt_bias, conv) fall back to
+averaging (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dense, mamba
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    k = cfg.hybrid.attn_every
+    assert cfg.n_layers % k == 0, "n_layers must divide by attn_every"
+    return cfg.n_layers // k
+
+
+def init_params(cfg: ModelConfig, rng):
+    ks = jax.random.split(rng, 5)
+    G, k = _n_groups(cfg), cfg.hybrid.attn_every
+    mp = mamba.mamba2_layer_init(ks[1], cfg, cfg.n_layers)
+    # reshape stacked L -> (G, k) for the grouped scan
+    mp = jax.tree_util.tree_map(
+        lambda x: x.reshape(G, k, *x.shape[1:]), mp)
+    # the shared block is attention + MLP (zamba2's d_ff lives here)
+    shared = {
+        "ln1": jnp.ones((cfg.d_model,), cfg.pdtype),
+        "ln2": jnp.ones((cfg.d_model,), cfg.pdtype),
+        **{key: val[0] for key, val in dense.attn_init(
+            ks[2], cfg, 1).items()},
+        **{key: val[0] for key, val in dense.mlp_init(
+            ks[4], cfg, 1).items()},
+    }
+    params = {
+        "embed": L.embed_init(ks[0], cfg.vocab, cfg.d_model, cfg.pdtype),
+        "mamba": mp,
+        "shared_attn": shared,
+        "ln_f": jnp.ones((cfg.d_model,), cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[3], cfg.d_model, cfg.vocab,
+                                         cfg.pdtype)
+    return params
+
+
+def forward(cfg: ModelConfig, params, batch):
+    x = params["embed"].astype(cfg.cdtype)[batch["tokens"]]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    sp = params["shared_attn"]
+
+    def group(x, gp):
+        # shared attention + MLP call (weight-tied across groups)
+        x = x + dense.attn_block(
+            sp, L.rms_norm(x, sp["ln1"], cfg.norm_eps), positions, cfg)
+        x = x + dense.mlp_block(
+            sp, L.rms_norm(x, sp["ln2"], cfg.norm_eps), cfg)
+
+        def inner_fn(x, lp):
+            y = mamba.mamba2_block(lp, L.rms_norm(x, lp["norm"],
+                                                  cfg.norm_eps), cfg)
+            return x + y, None
+
+        x, _ = jax.lax.scan(inner_fn, x, gp,
+                            unroll=cfg.hybrid.attn_every
+                            if cfg.unroll_layers else 1)
+        return x, None
+
+    G = _n_groups(cfg)
+    group_ = jax.checkpoint(group) if cfg.remat else group
+    x, _ = jax.lax.scan(group_, x, params["mamba"],
+                        unroll=G if cfg.unroll_layers else 1)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.cdtype)
+    return x @ head
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    return L.softmax_xent(forward(cfg, params, batch), batch["labels"],
+                          batch.get("loss_mask"))
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    """(last_logits, cache): mamba2 final states + shared-attn KV."""
+    from repro.models.mamba import causal_conv
+    x = params["embed"].astype(cfg.cdtype)[batch["tokens"]]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    sp = params["shared_attn"]
+
+    def group(x, gp):
+        h1 = L.rms_norm(x, sp["ln1"], cfg.norm_eps)
+        q, k, v = dense._qkv(sp, h1, cfg)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        o = L.chunked_attention(q, k, v, causal=True,
+                                q_chunk=cfg.attn_chunk_q,
+                                k_chunk=cfg.attn_chunk_k,
+                                unroll=cfg.unroll_layers)
+        x = x + o.reshape(B, S, cfg.n_heads * cfg.hd()) @ \
+            sp["wo"].astype(cfg.cdtype)
+        x = x + dense.mlp_block(
+            sp, L.rms_norm(x, sp["ln2"], cfg.norm_eps), cfg)
+
+        def inner(x, lp):
+            y, st = mamba2_block_with_state(
+                lp, L.rms_norm(x, lp["norm"], cfg.norm_eps), cfg)
+            return x + y, st
+
+        x, mstates = jax.lax.scan(inner, x, gp,
+                                  unroll=cfg.hybrid.attn_every
+                                  if cfg.unroll_layers else 1)
+        return x, (mstates, {"k": k, "v": v})
+
+    G = _n_groups(cfg)
+    group_ = jax.checkpoint(group) if cfg.remat else group
+    x, (mcache, acache) = jax.lax.scan(group_, x, params["mamba"],
+                                       unroll=G if cfg.unroll_layers else 1)
+    x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.cdtype)
+    return x @ head, {"mamba": mcache, "attn": acache}
+
+
+def mamba2_block_with_state(lp, x, cfg: ModelConfig):
+    """mamba2_block returning (y, {"h", "conv"}) final state."""
+    import repro.models.mamba as mm
+    s = cfg.ssm
+    dt_ = cfg.cdtype
+    B_, S, d = x.shape
+    xs, z, Bc, Cc, dt_raw, di, nh = mm._mamba2_split(lp, x, cfg)
+    hd = s.head_dim
+
+    xbc_raw = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_tail = xbc_raw[:, -(s.d_conv - 1):, :]
+    xbc = mm.causal_conv(xbc_raw, lp["conv_w"].astype(dt_),
+                         lp["conv_b"].astype(dt_))
+    xbc = jax.nn.silu(xbc)
+    xs, Bc, Cc = xbc[..., :di], xbc[..., di:di + s.d_state], \
+        xbc[..., di + s.d_state:]
+
+    dt = jax.nn.softplus(dt_raw + lp["dt_bias"].astype(dt_))
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt.astype(jnp.float32) * A)
+    xh = xs.reshape(B_, S, nh, hd).astype(jnp.float32)
+    dBx = dt.astype(jnp.float32)[..., None, None] * \
+        Bc.astype(jnp.float32)[:, :, None, :, None] * xh[..., None, :]
+
+    def step(h, inputs):
+        dA_t, dBx_t, C_t = inputs
+        h = dA_t[..., None, None] * h + dBx_t
+        y = jnp.einsum("bhsd,bs->bhd", h, C_t)
+        return h, y
+
+    if cfg.ssm_assoc:
+        dA_b = jnp.broadcast_to(dA[..., None, None], dBx.shape)
+        hs = mm._assoc_scan(dA_b, dBx)
+        h_fin = hs[:, -1]
+        y = jnp.einsum("bthsd,bts->bthd", hs,
+                       Cc.astype(jnp.float32))
+        y = y.reshape(B_, S, di).astype(dt_)
+    else:
+        h0 = jnp.zeros((B_, nh, s.d_state, hd), jnp.float32)
+        h_fin, ys = jax.lax.scan(
+            step, h0,
+            (dA.transpose(1, 0, 2), dBx.transpose(1, 0, 2, 3, 4),
+             Cc.astype(jnp.float32).transpose(1, 0, 2)))
+        y = ys.transpose(1, 0, 2, 3).reshape(B_, S, di).astype(dt_)
+    y = y + xs * jnp.repeat(lp["D"].astype(dt_), hd)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["gate_norm"], cfg.norm_eps)
+    return y @ lp["out_proj"].astype(dt_), \
+        {"h": h_fin, "conv": conv_tail}
+
+
+def init_cache(cfg: ModelConfig, batch: int, window: int):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = di // s.head_dim
+    G, k = _n_groups(cfg), cfg.hybrid.attn_every
+    return {
+        "mamba": {
+            "h": jnp.zeros((G, k, batch, nh, s.d_state, s.head_dim),
+                           jnp.float32),
+            "conv": jnp.zeros((G, k, batch, s.d_conv - 1,
+                               di + 2 * s.d_state), cfg.cdtype),
+        },
+        # shared attention: one ring-buffer KV cache per group *call site*
+        "attn": {
+            "k": jnp.zeros((G, batch, window, cfg.n_kv_heads, cfg.hd()),
+                           cfg.cdtype),
+            "v": jnp.zeros((G, batch, window, cfg.n_kv_heads, cfg.hd()),
+                           cfg.cdtype),
+        },
+    }
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, position):
+    x = params["embed"].astype(cfg.cdtype)[token]
+    sp = params["shared_attn"]
+
+    def group(x, scanned):
+        gp, mcache, acache = scanned
+        a, acache = dense.attn_block_decode(
+            sp, L.rms_norm(x, sp["ln1"], cfg.norm_eps), acache, position, cfg)
+        x = x + a
+        x = x + dense.mlp_block(
+            sp, L.rms_norm(x, sp["ln2"], cfg.norm_eps), cfg)
+
+        def inner(x, sc):
+            lp, st = sc
+            y, st = mamba.mamba2_decode(
+                lp, L.rms_norm(x, lp["norm"], cfg.norm_eps), st, cfg)
+            return x + y, st
+
+        x, mcache = jax.lax.scan(inner, x, (gp, mcache),
+                                 unroll=cfg.hybrid.attn_every
+                                 if cfg.unroll_layers else 1)
+        return x, (mcache, acache)
+
+    x, (mcache, acache) = jax.lax.scan(
+        group, x, (params["mamba"], cache["mamba"], cache["attn"]),
+        unroll=_n_groups(cfg) if cfg.unroll_layers else 1)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.cdtype)
+    return x @ head, {"mamba": mcache, "attn": acache}

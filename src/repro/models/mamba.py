@@ -1,0 +1,416 @@
+"""Mamba selective-state-space blocks.
+
+Mamba1 (falcon-mamba-7b, arXiv:2410.05355) and Mamba2/SSD (zamba2's ssm
+blocks, arXiv:2411.15242).  Training/prefill runs a sequential
+``lax.scan`` over time carrying only the (B, …, d_state) recurrent state
+(the chunked SSD formulation is a recorded §Perf candidate); decode is
+the O(1) single-step recurrence — which is why the SSM archs run the
+``long_500k`` shape natively.
+
+TPU adaptation (DESIGN.md §6): the depthwise causal conv is expressed as
+a sum of ``d_conv`` shifted scaled copies (no im2col), and the per-step
+state update is a pure VPU elementwise op batched over (B, d_inner).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def mamba1_layer_init(rng, cfg: ModelConfig, n_layers: int):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    r = s.dt_rank_(d)
+    ks = jax.random.split(rng, 6)
+
+    def stk(k, a, b):
+        kk = jax.random.split(k, n_layers)
+        return jnp.stack([L.dense_init(q, a, b, cfg.pdtype) for q in kk])
+
+    A = jnp.broadcast_to(jnp.arange(1, s.d_state + 1, dtype=jnp.float32),
+                         (n_layers, di, s.d_state))
+    return {
+        "norm": jnp.ones((n_layers, d), cfg.pdtype),
+        "in_proj": stk(ks[0], d, 2 * di),
+        "conv_w": (jax.random.normal(ks[1], (n_layers, di, s.d_conv)) * 0.1
+                   ).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((n_layers, di), cfg.pdtype),
+        "x_proj": stk(ks[2], di, r + 2 * s.d_state),
+        "dt_proj": stk(ks[3], r, di),
+        "dt_bias": jnp.zeros((n_layers, di), cfg.pdtype),
+        "A_log": jnp.log(A).astype(cfg.pdtype),
+        "D": jnp.ones((n_layers, di), cfg.pdtype),
+        "out_proj": stk(ks[4], di, d),
+    }
+
+
+def mamba2_layer_init(rng, cfg: ModelConfig, n_layers: int):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = di // s.head_dim
+    ks = jax.random.split(rng, 4)
+
+    def stk(k, a, b):
+        kk = jax.random.split(k, n_layers)
+        return jnp.stack([L.dense_init(q, a, b, cfg.pdtype) for q in kk])
+
+    return {
+        "norm": jnp.ones((n_layers, d), cfg.pdtype),
+        # fused projection: [x (di), z (di), B (nh*ds? no: ds), C (ds), dt (nh)]
+        "in_proj": stk(ks[0], d, 2 * di + 2 * s.d_state + nh),
+        "conv_w": (jax.random.normal(ks[1], (n_layers, di + 2 * s.d_state,
+                                             s.d_conv)) * 0.1).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((n_layers, di + 2 * s.d_state), cfg.pdtype),
+        "A_log": jnp.zeros((n_layers, nh), cfg.pdtype),
+        "dt_bias": jnp.zeros((n_layers, nh), cfg.pdtype),
+        "D": jnp.ones((n_layers, nh), cfg.pdtype),
+        "gate_norm": jnp.ones((n_layers, di), cfg.pdtype),
+        "out_proj": stk(ks[2], di, d),
+    }
+
+
+def init_params(cfg: ModelConfig, rng):
+    ks = jax.random.split(rng, 3)
+    params = {
+        "embed": L.embed_init(ks[0], cfg.vocab, cfg.d_model, cfg.pdtype),
+        "layers": mamba1_layer_init(ks[1], cfg, cfg.n_layers),
+        "ln_f": jnp.ones((cfg.d_model,), cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[2], cfg.d_model, cfg.vocab,
+                                         cfg.pdtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# causal depthwise conv (sum-of-shifts form)
+# --------------------------------------------------------------------------
+def causal_conv(x, w, b):
+    """x: (B, S, C); w: (C, K); b: (C,).  Causal depthwise conv."""
+    K = w.shape[-1]
+    out = x * w[:, -1]
+    for j in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, :-j]
+        out = out + shifted * w[:, K - 1 - j]
+    return out + b
+
+
+def causal_conv_step(x_t, conv_state, w, b):
+    """x_t: (B, C); conv_state: (B, K-1, C) past inputs (oldest first)."""
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,ck->bc", window, w) + b
+    return y, window[:, 1:]
+
+
+
+def _assoc_scan(dA, dBx):
+    """h_t = dA_t * h_{t-1} + dBx_t via associative scan over axis 1.
+
+    Loop-free HLO (log-depth): used by the roofline probe lowerings
+    (cfg.ssm_assoc) so XLA cost_analysis sees the true per-token work;
+    also the chunk-parallel execution candidate recorded in §Perf.
+    """
+    def combine(a, b):
+        A1, B1 = a
+        A2, B2 = b
+        return A1 * A2, B1 * A2 + B2
+
+    _, hs = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    return hs
+
+
+# --------------------------------------------------------------------------
+# mamba1 block
+# --------------------------------------------------------------------------
+def mamba1_block(lp, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (B, S, d)."""
+    s = cfg.ssm
+    dt_ = cfg.cdtype
+    B_, S, d = x.shape
+    di = s.d_inner(d)
+    r = s.dt_rank_(d)
+
+    xz = x @ lp["in_proj"].astype(dt_)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = causal_conv(xs, lp["conv_w"].astype(dt_), lp["conv_b"].astype(dt_))
+    xs = jax.nn.silu(xs)
+
+    proj = xs @ lp["x_proj"].astype(dt_)                     # (B,S,r+2ds)
+    dt_raw, Bc, Cc = jnp.split(proj, [r, r + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ lp["dt_proj"].astype(dt_)
+                         + lp["dt_bias"].astype(dt_))        # (B,S,di)
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))            # (di, ds)
+
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)      # (B,S,di,ds)
+    dBx = (dt * xs).astype(jnp.float32)[..., None] * \
+        Bc.astype(jnp.float32)[..., None, :]                 # (B,S,di,ds)
+
+    if cfg.ssm_assoc:
+        hs = _assoc_scan(dA, dBx)                            # (B,S,di,ds)
+        y = jnp.einsum("btds,bts->btd",
+                       hs, Cc.astype(jnp.float32)).astype(dt_)
+    else:
+        def step(h, inputs):
+            dA_t, dBx_t, C_t = inputs
+            h = dA_t * h + dBx_t                             # (B,di,ds)
+            y = jnp.einsum("bds,bs->bd", h, C_t)
+            return h, y
+
+        h0 = jnp.zeros((B_, di, s.d_state), jnp.float32)
+        _, ys = jax.lax.scan(
+            step, h0,
+            (dA.transpose(1, 0, 2, 3), dBx.transpose(1, 0, 2, 3),
+             Cc.astype(jnp.float32).transpose(1, 0, 2)))
+        y = ys.transpose(1, 0, 2).astype(dt_)                # (B,S,di)
+    y = y + xs * lp["D"].astype(dt_)
+    y = y * jax.nn.silu(z)
+    return y @ lp["out_proj"].astype(dt_)
+
+
+def mamba1_decode(lp, x, state, cfg: ModelConfig):
+    """x: (B, 1, d); state: {"h": (B,di,ds), "conv": (B,K-1,di)}."""
+    s = cfg.ssm
+    dt_ = cfg.cdtype
+    B_ = x.shape[0]
+    d = x.shape[-1]
+    r = s.dt_rank_(d)
+
+    xz = x[:, 0] @ lp["in_proj"].astype(dt_)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, conv = causal_conv_step(xs, state["conv"],
+                                lp["conv_w"].astype(dt_),
+                                lp["conv_b"].astype(dt_))
+    xs = jax.nn.silu(xs)
+    proj = xs @ lp["x_proj"].astype(dt_)
+    dt_raw, Bc, Cc = jnp.split(proj, [r, r + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ lp["dt_proj"].astype(dt_)
+                         + lp["dt_bias"].astype(dt_))
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)      # (B,di,ds)
+    dBx = (dt * xs).astype(jnp.float32)[..., None] * \
+        Bc.astype(jnp.float32)[..., None, :]
+    h = dA * state["h"] + dBx
+    y = jnp.einsum("bds,bs->bd", h, Cc.astype(jnp.float32)).astype(dt_)
+    y = y + xs * lp["D"].astype(dt_)
+    y = y * jax.nn.silu(z)
+    y = (y @ lp["out_proj"].astype(dt_))[:, None]
+    return y, {"h": h, "conv": conv}
+
+
+# --------------------------------------------------------------------------
+# mamba2 (SSD, scalar per-head decay) block
+# --------------------------------------------------------------------------
+def _mamba2_split(lp, x, cfg: ModelConfig):
+    s = cfg.ssm
+    dt_ = cfg.cdtype
+    d = x.shape[-1]
+    di = s.d_inner(d)
+    nh = di // s.head_dim
+    proj = x @ lp["in_proj"].astype(dt_)
+    xs = proj[..., :di]
+    z = proj[..., di:2 * di]
+    Bc = proj[..., 2 * di:2 * di + s.d_state]
+    Cc = proj[..., 2 * di + s.d_state:2 * di + 2 * s.d_state]
+    dt_raw = proj[..., 2 * di + 2 * s.d_state:]
+    return xs, z, Bc, Cc, dt_raw, di, nh
+
+
+def mamba2_block(lp, x, cfg: ModelConfig):
+    s = cfg.ssm
+    dt_ = cfg.cdtype
+    B_, S, d = x.shape
+    xs, z, Bc, Cc, dt_raw, di, nh = _mamba2_split(lp, x, cfg)
+    hd = s.head_dim
+
+    xbc = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    xbc = causal_conv(xbc, lp["conv_w"].astype(dt_), lp["conv_b"].astype(dt_))
+    xbc = jax.nn.silu(xbc)
+    xs, Bc, Cc = xbc[..., :di], xbc[..., di:di + s.d_state], \
+        xbc[..., di + s.d_state:]
+
+    dt = jax.nn.softplus(dt_raw + lp["dt_bias"].astype(dt_))  # (B,S,nh)
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))             # (nh,)
+    dA = jnp.exp(dt.astype(jnp.float32) * A)                  # (B,S,nh)
+    xh = xs.reshape(B_, S, nh, hd).astype(jnp.float32)
+    dBx = dt.astype(jnp.float32)[..., None, None] * \
+        Bc.astype(jnp.float32)[:, :, None, :, None] * \
+        xh[..., None, :]                                      # (B,S,nh,ds,hd)
+
+    def step(h, inputs):
+        dA_t, dBx_t, C_t = inputs                             # (B,nh),(B,nh,ds,hd),(B,ds)
+        h = dA_t[..., None, None] * h + dBx_t
+        y = jnp.einsum("bhsd,bs->bhd", h, C_t)                # s == d_state
+        return h, y
+
+    if cfg.ssm_assoc:
+        dA_b = jnp.broadcast_to(dA[..., None, None], dBx.shape)
+        hs = _assoc_scan(dA_b, dBx)                    # (B,S,nh,ds,hd)
+        y = jnp.einsum("bthsd,bts->bthd", hs,
+                       Cc.astype(jnp.float32))
+        y = y.reshape(B_, S, di).astype(dt_)
+    else:
+        h0 = jnp.zeros((B_, nh, s.d_state, hd), jnp.float32)
+        _, ys = jax.lax.scan(
+            step, h0,
+            (dA.transpose(1, 0, 2), dBx.transpose(1, 0, 2, 3, 4),
+             Cc.astype(jnp.float32).transpose(1, 0, 2)))
+        y = ys.transpose(1, 0, 2, 3).reshape(B_, S, di).astype(dt_)
+    y = y + xs * jnp.repeat(lp["D"].astype(dt_), hd)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["gate_norm"], cfg.norm_eps)
+    return y @ lp["out_proj"].astype(dt_)
+
+
+def mamba2_decode(lp, x, state, cfg: ModelConfig):
+    s = cfg.ssm
+    dt_ = cfg.cdtype
+    B_ = x.shape[0]
+    xs, z, Bc, Cc, dt_raw, di, nh = _mamba2_split(lp, x[:, 0:1], cfg)
+    hd = s.head_dim
+    xs, z, Bc, Cc, dt_raw = (t[:, 0] for t in (xs, z, Bc, Cc, dt_raw))
+
+    xbc = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    xbc, conv = causal_conv_step(xbc, state["conv"],
+                                 lp["conv_w"].astype(dt_),
+                                 lp["conv_b"].astype(dt_))
+    xbc = jax.nn.silu(xbc)
+    xs, Bc, Cc = xbc[..., :di], xbc[..., di:di + s.d_state], \
+        xbc[..., di + s.d_state:]
+
+    dt = jax.nn.softplus(dt_raw + lp["dt_bias"].astype(dt_))  # (B,nh)
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt.astype(jnp.float32) * A)                  # (B,nh)
+    xh = xs.reshape(B_, nh, hd).astype(jnp.float32)
+    dBx = dt.astype(jnp.float32)[..., None, None] * \
+        Bc.astype(jnp.float32)[:, None, :, None] * xh[:, :, None, :]
+    h = dA[..., None, None] * state["h"] + dBx                # (B,nh,ds,hd)
+    y = jnp.einsum("bhsd,bs->bhd", h, Cc.astype(jnp.float32))
+    y = y.reshape(B_, di).astype(dt_)
+    y = y + xs * jnp.repeat(lp["D"].astype(dt_), hd)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["gate_norm"], cfg.norm_eps)
+    y = (y @ lp["out_proj"].astype(dt_))[:, None]
+    return y, {"h": h, "conv": conv}
+
+
+# --------------------------------------------------------------------------
+# full mamba1 model (falcon-mamba)
+# --------------------------------------------------------------------------
+def forward(cfg: ModelConfig, params, batch):
+    x = params["embed"].astype(cfg.cdtype)[batch["tokens"]]
+
+    def body(x, lp):
+        return x + mamba1_block(lp, L.rms_norm(x, lp["norm"], cfg.norm_eps),
+                                cfg), None
+
+    body_ = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_, x, params["layers"], unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.cdtype)
+    return x @ head
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    return L.softmax_xent(forward(cfg, params, batch), batch["labels"],
+                          batch.get("loss_mask"))
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    """Forward over the prompt; returns (last_logits, ssm_state_cache).
+
+    The SSM state is O(1) in sequence length — the recurrence's final
+    (h, conv-tail) per layer is the whole decode cache.
+    """
+    x = params["embed"].astype(cfg.cdtype)[batch["tokens"]]
+    s = cfg.ssm
+
+    def body(x, lp):
+        h_in = L.rms_norm(x, lp["norm"], cfg.norm_eps)
+        y, state = _mamba1_block_with_state(lp, h_in, cfg)
+        return x + y, state
+
+    body_ = jax.checkpoint(body) if cfg.remat else body
+    x, cache = jax.lax.scan(body_, x, params["layers"], unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.cdtype)
+    return x @ head, cache
+
+
+def _mamba1_block_with_state(lp, x, cfg: ModelConfig):
+    """mamba1_block that also returns the final recurrent state."""
+    s = cfg.ssm
+    dt_ = cfg.cdtype
+    B_, S, d = x.shape
+    di = s.d_inner(d)
+    r = s.dt_rank_(d)
+
+    xz = x @ lp["in_proj"].astype(dt_)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_tail = xs[:, -(s.d_conv - 1):, :]              # pre-activation taps
+    xs = causal_conv(xs, lp["conv_w"].astype(dt_), lp["conv_b"].astype(dt_))
+    xs = jax.nn.silu(xs)
+
+    proj = xs @ lp["x_proj"].astype(dt_)
+    dt_raw, Bc, Cc = jnp.split(proj, [r, r + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ lp["dt_proj"].astype(dt_)
+                         + lp["dt_bias"].astype(dt_))
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)
+    dBx = (dt * xs).astype(jnp.float32)[..., None] * \
+        Bc.astype(jnp.float32)[..., None, :]
+
+    def step(h, inputs):
+        dA_t, dBx_t, C_t = inputs
+        h = dA_t * h + dBx_t
+        y = jnp.einsum("bds,bs->bd", h, C_t)
+        return h, y
+
+    if cfg.ssm_assoc:
+        hs = _assoc_scan(dA, dBx)
+        h_fin = hs[:, -1]
+        y = jnp.einsum("btds,bts->btd",
+                       hs, Cc.astype(jnp.float32)).astype(dt_)
+    else:
+        h0 = jnp.zeros((B_, di, s.d_state), jnp.float32)
+        h_fin, ys = jax.lax.scan(
+            step, h0,
+            (dA.transpose(1, 0, 2, 3), dBx.transpose(1, 0, 2, 3),
+             Cc.astype(jnp.float32).transpose(1, 0, 2)))
+        y = ys.transpose(1, 0, 2).astype(dt_)
+    y = y + xs * lp["D"].astype(dt_)
+    y = y * jax.nn.silu(z)
+    return y @ lp["out_proj"].astype(dt_), {"h": h_fin, "conv": conv_tail}
+
+
+def init_cache(cfg: ModelConfig, batch: int, window: int = 0):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nL = cfg.n_layers
+    return {
+        "h": jnp.zeros((nL, batch, di, s.d_state), jnp.float32),
+        "conv": jnp.zeros((nL, batch, s.d_conv - 1, di), cfg.cdtype),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, position):
+    x = params["embed"].astype(cfg.cdtype)[token]
+
+    def body(x, scanned):
+        lp, st = scanned
+        y, st = mamba1_decode(lp, L.rms_norm(x, lp["norm"], cfg.norm_eps),
+                              st, cfg)
+        return x + y, st
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache), unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.cdtype)
+    return x @ head, new_cache

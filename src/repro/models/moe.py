@@ -1,0 +1,236 @@
+"""Mixture-of-Experts transformer (qwen2-moe / grok-1 families).
+
+The MoE block replaces the dense MLP; attention/embedding/decode logic
+is reused from ``repro.models.dense``.  Dispatch is **grouped**: tokens
+are processed in groups of ``moe.group_size`` with a per-group capacity
+``C = ceil(top_k * g / E * capacity_factor)``, Switch-style one-hot
+dispatch/combine tensors, so dispatch FLOPs stay O(g·E·C·d) per group
+instead of O(T·E·T·d) globally.  (A sort-based ragged dispatch is the
+§Perf hillclimb alternative.)
+
+Expert weights are tensor-parallel (d_ff sharded over the ``model``
+axis) because neither 60 nor 8 experts divide the 16-way model axis —
+see DESIGN.md §5; the expert-parallel variant for grok (8 | mesh
+reshape) is a recorded perf experiment.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dense
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def moe_init(rng, cfg: ModelConfig, n_layers: int):
+    m = cfg.moe
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 5)
+
+    def expert_stack(k, d_in, d_out):
+        kk = jax.random.split(k, n_layers * m.n_experts)
+        w = jnp.stack([L.dense_init(q, d_in, d_out, cfg.pdtype) for q in kk])
+        return w.reshape(n_layers, m.n_experts, d_in, d_out)
+
+    p = {
+        "router": dense._stacked(ks[0], n_layers, d, m.n_experts, cfg),
+        "we_gate": expert_stack(ks[1], d, f),
+        "we_up": expert_stack(ks[2], d, f),
+        "we_down": expert_stack(ks[3], f, d),
+    }
+    if m.n_shared_experts:
+        fs = f * m.n_shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["ws_gate"] = dense._stacked(kk[0], n_layers, d, fs, cfg)
+        p["ws_up"] = dense._stacked(kk[1], n_layers, d, fs, cfg)
+        p["ws_down"] = dense._stacked(kk[2], n_layers, fs, d, cfg)
+    return p
+
+
+def init_params(cfg: ModelConfig, rng):
+    k1, k2 = jax.random.split(rng)
+    params = dense.init_params(cfg.replace(family="dense"), k1)
+    layer_p = params["layers"]
+    for key in ("w_gate", "w_up", "w_down"):
+        del layer_p[key]
+    layer_p.update(moe_init(k2, cfg, cfg.n_layers))
+    return params
+
+
+# --------------------------------------------------------------------------
+# dispatch
+# --------------------------------------------------------------------------
+def _route(lp, xg, cfg: ModelConfig):
+    """xg: (N, g, d) grouped tokens.  Returns dispatch/combine tensors.
+
+    dispatch: (N, g, E, C) float {0,1};  combine: (N, g, E, C) float.
+    """
+    m = cfg.moe
+    N, g, d = xg.shape
+    E = m.n_experts
+    C = max(1, math.ceil(m.top_k * g / E * m.capacity_factor))
+
+    logits = (xg @ lp["router"].astype(cfg.cdtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (N, g, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, m.top_k)      # (N, g, k)
+    # renormalise the selected gates
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (N, g, k, E)
+    # position of each (token, choice) within its expert queue
+    flat = onehot.reshape(N, g * m.top_k, E)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1.0              # (N, g*k, E)
+    pos = pos.reshape(N, g, m.top_k, E)
+    keep = (pos >= 0) & (pos < C)
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, -1).astype(jnp.int32), C,
+                            dtype=jnp.float32)               # (N, g, k, E, C)
+    dispatch = jnp.sum(pos_oh, axis=2)                       # (N, g, E, C)
+    combine = jnp.sum(pos_oh * gate_vals[..., None, None], axis=2)
+
+    # aux losses (Switch-style)
+    me = jnp.mean(probs, axis=1)                             # (N, E)
+    ce = jnp.mean(onehot.sum(2), axis=1)                     # fraction routed
+    lb_loss = E * jnp.mean(jnp.sum(me * ce, axis=-1))
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = m.load_balance_loss * lb_loss + m.router_z_loss * z_loss
+    return dispatch, combine, aux
+
+
+def _route_gather(lp, xg, cfg: ModelConfig):
+    """Scatter/gather routing — identical semantics to :func:`_route`
+    (same top-k, same capacity-order token dropping) with ZERO matmul
+    FLOPs in dispatch/combine.  Returns (xe (N,E,C,d) expert inputs,
+    combine_fn(ye) -> (N,g,d), aux)."""
+    m = cfg.moe
+    N, g, d = xg.shape
+    E = m.n_experts
+    C = max(1, math.ceil(m.top_k * g / E * m.capacity_factor))
+
+    logits = (xg @ lp["router"].astype(cfg.cdtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, m.top_k)      # (N,g,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)
+    flat = onehot.reshape(N, g * m.top_k, E)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1.0
+    slot = jnp.sum(pos.reshape(N, g, m.top_k, E) * onehot,
+                   axis=-1).astype(jnp.int32)                # (N,g,k)
+    keep = (slot >= 0) & (slot < C)
+    slot_c = jnp.clip(slot, 0, C - 1)
+
+    def scatter_one(xg_n, eidx_n, slot_n, keep_n):
+        # xg_n (g,d); choice streams flattened (g*k,)
+        tok = jnp.repeat(jnp.arange(g), m.top_k)
+        e = eidx_n.reshape(-1)
+        s = slot_n.reshape(-1)
+        k_mask = keep_n.reshape(-1)
+        vals = xg_n[tok] * k_mask[:, None].astype(xg_n.dtype)
+        xe = jnp.zeros((E, C, xg_n.shape[-1]), xg_n.dtype)
+        return xe.at[e, s].add(vals)
+
+    xe = jax.vmap(scatter_one)(xg, gate_idx, slot_c, keep)
+
+    def combine_fn(ye):
+        def gather_one(ye_n, eidx_n, slot_n, keep_n, gv_n):
+            e = eidx_n.reshape(-1)
+            s = slot_n.reshape(-1)
+            w = (gv_n.reshape(-1) * keep_n.reshape(-1)
+                 ).astype(ye_n.dtype)
+            vals = ye_n[e, s] * w[:, None]                   # (g*k, d)
+            return vals.reshape(g, m.top_k, -1).sum(axis=1)
+
+        return jax.vmap(gather_one)(ye, gate_idx, slot_c, keep,
+                                    gate_vals)
+
+    me = jnp.mean(probs, axis=1)
+    ce = jnp.mean(onehot.sum(2), axis=1)
+    lb_loss = E * jnp.mean(jnp.sum(me * ce, axis=-1))
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = m.load_balance_loss * lb_loss + m.router_z_loss * z_loss
+    return xe, combine_fn, aux
+
+
+def moe_block(lp, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    g = min(m.group_size, T)
+    pad = (-T) % g
+    xf = jnp.pad(x.reshape(T, d), ((0, pad), (0, 0)))
+    N = xf.shape[0] // g
+    xg = xf.reshape(N, g, d)
+    dt = cfg.cdtype
+
+    if m.dispatch_mode == "gather":
+        xe, combine_fn, aux = _route_gather(lp, xg, cfg)
+        xe = xe.astype(dt)
+        h = jax.nn.silu(jnp.einsum("necd,edf->necf", xe,
+                                   lp["we_gate"].astype(dt)))
+        h = h * jnp.einsum("necd,edf->necf", xe,
+                           lp["we_up"].astype(dt))
+        ye = jnp.einsum("necf,efd->necd", h, lp["we_down"].astype(dt))
+        y = combine_fn(ye)
+    else:
+        dispatch, combine, aux = _route(lp, xg, cfg)
+        xe = jnp.einsum("ngec,ngd->necd", dispatch.astype(dt), xg)
+        h = jax.nn.silu(jnp.einsum("necd,edf->necf", xe,
+                                   lp["we_gate"].astype(dt)))
+        h = h * jnp.einsum("necd,edf->necf", xe, lp["we_up"].astype(dt))
+        ye = jnp.einsum("necf,efd->necd", h, lp["we_down"].astype(dt))
+        y = jnp.einsum("ngec,necd->ngd", combine.astype(dt), ye)
+    y = y.reshape(-1, d)[:T].reshape(B, S, d)
+
+    if m.n_shared_experts:
+        y = y + L.swiglu(x, lp["ws_gate"].astype(dt), lp["ws_up"].astype(dt),
+                         lp["ws_down"].astype(dt))
+    return y, aux
+
+
+# --------------------------------------------------------------------------
+# model API (reuses dense forward with an mlp hook; aux loss via side sum)
+# --------------------------------------------------------------------------
+def forward(cfg: ModelConfig, params, batch, collect_aux: bool = False):
+    x, positions = dense.embed_inputs(cfg, params, batch)
+
+    def body(carry, lp):
+        x, aux = carry
+        h = x + dense.attn_block(
+            lp, L.rms_norm(x, lp["ln1"], cfg.norm_eps), positions, cfg)
+        y, a = moe_block(lp, L.rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+        return (h + y, aux + a), None
+
+    body_ = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_, (x, jnp.float32(0.0)),
+                               params["layers"], unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.cdtype)
+    logits = x @ head
+    return (logits, aux) if collect_aux else logits
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    logits, aux = forward(cfg, params, batch, collect_aux=True)
+    return L.softmax_xent(logits, batch["labels"],
+                          batch.get("loss_mask")) + aux
+
+
+init_cache = dense.init_cache
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    return dense.prefill(cfg, params, batch,
+                         mlp_fn=lambda lp, y: moe_block(lp, y, cfg)[0])
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, position):
+    return dense.decode_step(
+        cfg, params, cache, token, position,
+        mlp_fn=lambda lp, y: moe_block(lp, y, cfg)[0])

@@ -1,0 +1,163 @@
+"""Uniform model API over all six architecture families.
+
+``get_model(cfg)`` returns a ``ModelAPI`` namespace with:
+
+  init_params(rng)                  -> params pytree
+  loss_fn(params, batch)            -> scalar
+  forward(params, batch)            -> logits
+  init_cache(batch, window)         -> decode cache pytree
+  decode_step(params, cache, token, position) -> (logits, cache)
+  input_specs(shape)                -> {batch / decode inputs} as
+                                       ShapeDtypeStructs (dry-run stand-ins)
+  train_step / serve_step factories with the optimizer folded in.
+
+This is the single surface the launcher, the dry-run driver, the FL
+substrate, and the benchmarks all talk to.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dense, encdec, hybrid, mamba, moe
+from repro.models.config import InputShape, ModelConfig
+from repro.optim import Optimizer
+
+
+_FAMILY = {
+    "dense": dense, "vlm": dense, "moe": moe,
+    "ssm": mamba, "hybrid": hybrid, "encdec": encdec,
+}
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ModelConfig
+    mod: Any
+
+    # ----- parameters ----------------------------------------------------
+    def init_params(self, rng):
+        return self.mod.init_params(self.cfg, rng)
+
+    def param_specs(self):
+        return jax.eval_shape(
+            lambda: self.mod.init_params(self.cfg, jax.random.PRNGKey(0)))
+
+    # ----- forward / loss -------------------------------------------------
+    def forward(self, params, batch):
+        return self.mod.forward(self.cfg, params, batch)
+
+    def loss_fn(self, params, batch):
+        return self.mod.loss_fn(self.cfg, params, batch)
+
+    def prefill(self, params, batch):
+        """(last_logits, decode_cache) over the full prompt."""
+        return self.mod.prefill(self.cfg, params, batch)
+
+    # ----- decode ----------------------------------------------------------
+    def init_cache(self, batch: int, window: int):
+        return self.mod.init_cache(self.cfg, batch, window)
+
+    def decode_step(self, params, cache, token, position):
+        return self.mod.decode_step(self.cfg, params, cache, token, position)
+
+    def cache_specs(self, batch: int, window: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, window))
+
+    # ----- input stand-ins --------------------------------------------------
+    def input_specs(self, shape: InputShape) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        sds = jax.ShapeDtypeStruct
+
+        if shape.kind in ("train", "prefill"):
+            if cfg.family == "encdec":
+                e = cfg.encdec
+                return {
+                    "audio_embeds": sds((B, S, cfg.d_model), cfg.cdtype),
+                    "tokens": sds((B, e.dec_seq), i32),
+                    "labels": sds((B, e.dec_seq), i32),
+                }
+            if cfg.family == "vlm":
+                P = cfg.vlm.n_patches
+                n_text = S - P
+                return {
+                    "tokens": sds((B, n_text), i32),
+                    "patch_embeds": sds((B, P, cfg.vlm.d_vision), cfg.cdtype),
+                    "labels": sds((B, n_text), i32),
+                }
+            return {
+                "tokens": sds((B, S), i32),
+                "labels": sds((B, S), i32),
+            }
+
+        # decode: one token against a cache of length min(S, window)
+        window = self.decode_window(shape)
+        return {
+            "token": sds((B, 1), i32),
+            "position": sds((), i32),
+            "cache": self.cache_specs(B, window),
+        }
+
+    def decode_window(self, shape: InputShape) -> int:
+        """KV window for a decode shape: full S at 32k; sliding window at
+        500k for attention archs (SSM caches ignore the value)."""
+        cfg = self.cfg
+        if shape.seq_len > 65536:
+            return cfg.window
+        return shape.seq_len
+
+    # ----- step factories -----------------------------------------------
+    def make_train_step(self, optimizer: Optimizer) -> Callable:
+        """Train step with optional gradient accumulation
+        (cfg.microbatches) — the memory knob that lets the 314B/405B
+        configs fit (DESIGN.md §5)."""
+        n_micro = self.cfg.microbatches
+
+        def train_step(params, opt_state, batch, step):
+            if n_micro <= 1:
+                loss, grads = jax.value_and_grad(self.loss_fn)(params,
+                                                               batch)
+            else:
+                def split(x):
+                    return x.reshape((n_micro, x.shape[0] // n_micro)
+                                     + x.shape[1:])
+
+                micro = jax.tree_util.tree_map(split, batch)
+
+                def acc_fn(carry, mb):
+                    loss_acc, grad_acc = carry
+                    l, g = jax.value_and_grad(self.loss_fn)(params, mb)
+                    grad_acc = jax.tree_util.tree_map(
+                        lambda a, b: a + b.astype(a.dtype), grad_acc, g)
+                    return (loss_acc + l, grad_acc), None
+
+                zeros = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (loss, grads), _ = jax.lax.scan(
+                    acc_fn, (jnp.float32(0.0), zeros), micro)
+                loss = loss / n_micro
+                grads = jax.tree_util.tree_map(lambda g: g / n_micro,
+                                               grads)
+            params, opt_state = optimizer.update(grads, opt_state, params,
+                                                 step)
+            return params, opt_state, loss
+        return train_step
+
+    def make_serve_step(self) -> Callable:
+        def serve_step(params, cache, token, position):
+            logits, cache = self.decode_step(params, cache, token, position)
+            next_token = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+            return next_token.astype(jnp.int32), cache
+        return serve_step
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family not in _FAMILY:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return ModelAPI(cfg, _FAMILY[cfg.family])

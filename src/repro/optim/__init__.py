@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, sgd, adamw, cosine_schedule, constant_schedule,
+    clip_by_global_norm,
+)

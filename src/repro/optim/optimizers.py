@@ -1,0 +1,113 @@
+"""Minimal optax-shaped optimizer library (optax is not available offline).
+
+``Optimizer`` is an (init, update) pair; ``update`` maps
+(grads, state, params, step) -> (new_params, new_state).  The paper's
+local training recipe is SGD(lr=0.01, momentum=0.5); AdamW is provided
+for the LM-scale configs.  Momentum/Adam moments can be stored in a
+reduced dtype (``state_dtype``) — the memory knob used by the 405B
+roofline fit (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import trees
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_schedule(lr: float, warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = trees.tree_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return trees.tree_scale(grads, scale), norm
+
+
+def sgd(lr=0.01, momentum: float = 0.0, weight_decay: float = 0.0,
+        state_dtype=None) -> Optimizer:
+    """SGD with (optional) heavy-ball momentum — the paper's client recipe."""
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"m": trees.tree_zeros_like(
+            params, dtype=state_dtype)}
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+        if momentum != 0.0:
+            m = trees.tree_map(
+                lambda m, g: (momentum * m.astype(jnp.float32)
+                              + g.astype(jnp.float32)).astype(m.dtype),
+                state["m"], grads)
+            delta = m
+            state = {"m": m}
+        else:
+            delta = grads
+        new_params = trees.tree_map(
+            lambda p, d: (p.astype(jnp.float32)
+                          - lr_t * (d.astype(jnp.float32)
+                                    + weight_decay * p.astype(jnp.float32))
+                          ).astype(p.dtype),
+            params, delta)
+        return new_params, state
+
+    return Optimizer(init, update)
+
+
+def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay: float = 0.0,
+          state_dtype=None) -> Optimizer:
+    sched = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        z = lambda: trees.tree_zeros_like(params, dtype=state_dtype)
+        return {"m": z(), "v": z()}
+
+    def update(grads, state, params, step):
+        lr_t = sched(step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        m = trees.tree_map(
+            lambda m, g: (b1 * m.astype(jnp.float32)
+                          + (1 - b1) * g.astype(jnp.float32)).astype(m.dtype),
+            state["m"], grads)
+        v = trees.tree_map(
+            lambda v, g: (b2 * v.astype(jnp.float32)
+                          + (1 - b2) * jnp.square(g.astype(jnp.float32))
+                          ).astype(v.dtype),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, m_, v_):
+            mh = m_.astype(jnp.float32) / bc1
+            vh = v_.astype(jnp.float32) / bc2
+            step_ = mh / (jnp.sqrt(vh) + eps) + weight_decay * \
+                p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * step_).astype(p.dtype)
+
+        new_params = trees.tree_map(upd, params, m, v)
+        return new_params, {"m": m, "v": v}
+
+    return Optimizer(init, update)

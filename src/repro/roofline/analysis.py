@@ -1,0 +1,170 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware).
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+    compute    = FLOPs_per_chip / peak_FLOPs          (MXU bound)
+    memory     = bytes_per_chip / HBM_bw              (HBM bound)
+    collective = collective_bytes_per_chip / link_bw  (ICI bound)
+
+Sources: ``compiled.cost_analysis()`` provides flops and bytes accessed
+for the *per-device* SPMD program.  Collective bytes are NOT in
+cost_analysis — :func:`collective_bytes` parses the optimized HLO text
+and sums result-shape bytes of every collective op, weighted by the
+ring-transfer factor for its kind (all-reduce moves ~2×(n−1)/n of the
+buffer per chip; all-gather/reduce-scatter ~(n−1)/n; all-to-all and
+collective-permute ~1×).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment brief).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# ops and their per-chip ring-transfer byte multipliers (applied to the
+# result shape; n-dependent (n-1)/n factors are folded to 1 for n >> 1)
+_COLL_FACTORS = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "ragged-all-to-all": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[\w\[\],{}<>:#\s]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute|ragged-all-to-all)(?:-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-kind result bytes of collectives in optimized HLO."""
+    out = {k: 0 for k in _COLL_FACTORS}
+    count = {k: 0 for k in _COLL_FACTORS}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if "-done(" in line:
+            continue
+        # result shape(s): text before '=' names the value; shapes appear
+        # right after '=' — take every shape up to the op name
+        lhs_rhs = line.split("=", 1)
+        if len(lhs_rhs) != 2:
+            continue
+        rhs = lhs_rhs[1]
+        op_pos = rhs.find(kind)
+        shapes = _SHAPE_RE.findall(rhs[:op_pos])
+        total = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        out[kind] += total
+        count[kind] += 1
+    return {"bytes": out, "count": count,
+            "weighted_total": sum(out[k] * _COLL_FACTORS[k]
+                                  for k in out)}
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_chip: float
+    bytes_per_chip: float            # HLO 'bytes accessed' (fusion-free UB)
+    coll_bytes_per_chip: float
+    model_flops: float            # 6·N·D (active) for the global step
+    chips: int
+    bytes_model_per_chip: float = 0.0  # analytic flash-aware HBM model
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        """Spec formula: HLO bytes (documented fusion-free upper bound)."""
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_memory_model(self) -> float:
+        """Flash-aware analytic HBM traffic (used for bottleneck calls)."""
+        return self.bytes_model_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        mem = self.t_memory_model or self.t_memory
+        ts = {"compute": self.t_compute, "memory": mem,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs (remat/dispatch waste shows
+        up as a small ratio)."""
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on MFU implied by the dominant term."""
+        t = max(self.t_compute, self.t_memory_model or self.t_memory,
+                self.t_collective)
+        if t == 0:
+            return 0.0
+        return (self.model_flops / self.chips / PEAK_FLOPS) / t
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_memory_model": self.t_memory_model,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """6·N·D for training; 2·N·D for inference (per global step)."""
+    n = cfg.n_active_params()
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

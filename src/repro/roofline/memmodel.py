@@ -1,0 +1,187 @@
+"""Analytic HBM-traffic model (flash-aware memory roofline term).
+
+Why this exists: ``cost_analysis()['bytes accessed']`` on the CPU
+backend counts every op's operands/results at (near-absent) fusion
+boundaries, so it is a *fusion-free upper bound* — on a real TPU the
+flash-attention chunk tiles and elementwise chains live in VMEM and
+never hit HBM.  The dry-run records both numbers; bottleneck calls and
+§Perf iterations use this model, which counts only tensors that
+genuinely cross HBM on the TPU target:
+
+  train:  3× param reads (fwd + bwd + remat recompute, per microbatch)
+          + grad/momentum/param update traffic
+          + per-layer activation checkpoints (write + read)
+          + flash-attention q/k/v/o traffic with the kv re-read factor
+          + logits + embedding gather
+  prefill: forward-only subset + KV-cache writes
+  decode:  active params once per token + KV (or SSM state) read/write
+
+All numbers are per chip, honouring the sharding rules (model-axis
+sharding divides feature dims; data/pod axes divide batch; fsdp weight
+gathers are charged to the collective term, not HBM).
+"""
+from __future__ import annotations
+
+from repro.models.config import InputShape, ModelConfig
+
+BF16 = 2
+F32 = 4
+
+
+def _chips(mesh_name: str) -> tuple[int, int, int]:
+    if mesh_name == "2x16x16":
+        return 2, 16, 16
+    return 1, 16, 16
+
+
+def param_bytes_local(cfg: ModelConfig, n_model: int, n_data: int) -> float:
+    """bf16 parameter bytes per chip under the sharding rules."""
+    shard = n_model * (n_data if cfg.fsdp else 1)
+    return cfg.n_params() * BF16 / shard
+
+
+def active_param_bytes_local(cfg: ModelConfig, n_model: int,
+                             n_data: int) -> float:
+    shard = n_model * (n_data if cfg.fsdp else 1)
+    return cfg.n_active_params() * BF16 / shard
+
+
+def _attn_traffic(cfg: ModelConfig, tokens_local: int, seq: int) -> float:
+    """flash q/k/v/o HBM traffic per layer (bf16), incl. kv re-reads."""
+    if cfg.n_heads == 0:
+        return 0.0
+    hd = cfg.hd()
+    q = tokens_local * cfg.n_heads * hd
+    kv = tokens_local * cfg.n_kv_heads * hd * 2
+    nq = max(1, seq // max(cfg.attn_chunk_q, 1))
+    return (q * 2 + kv * (1 + nq)) * BF16
+
+
+def _layer_act_traffic(cfg: ModelConfig, tokens_local: int,
+                       seq: int, n_model: int) -> float:
+    """forward HBM activation traffic per layer per chip (bf16)."""
+    d = cfg.d_model
+    t = tokens_local
+    if cfg.family in ("dense", "vlm", "encdec"):
+        f_eff = cfg.d_ff / n_model
+        resid = 6 * t * d                     # norms + residual adds
+        proj = t * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.hd() / n_model
+        mlp = t * (2 * f_eff * 2 + 2 * d)     # gate/up h + down in/out
+        return (resid + 2 * proj + mlp) * BF16 + _attn_traffic(
+            cfg, t, seq) / n_model
+    if cfg.family == "moe":
+        m = cfg.moe
+        f_eff = cfg.d_ff / n_model
+        resid = 6 * t * d
+        proj = t * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.hd() / n_model
+        routed = t * m.top_k * (2 * f_eff * 2 + 2 * d) * m.capacity_factor
+        shared = t * (2 * m.n_shared_experts * f_eff * 2 + 2 * d) \
+            if m.n_shared_experts else 0.0
+        dispatch = t * m.n_experts * 4        # routing tensors (f32-ish)
+        return (resid + 2 * proj + routed + shared + dispatch) * BF16 + \
+            _attn_traffic(cfg, t, seq) / n_model
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        di = s.d_inner(d) / n_model
+        # in_proj out (2di), conv rw (2di), x_proj/dt (small), scan io
+        # (dA,dBx,C read + y write ~ 3·di·ds f32 + di), out_proj io
+        scan_io = t * (3 * di * s.d_state) * F32
+        return (t * (6 * d + 6 * di) * BF16 + scan_io)
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        di = s.d_inner(d) / n_model
+        scan_io = t * (3 * di * s.d_state) * F32
+        mamba = t * (6 * d + 6 * di) * BF16 + scan_io
+        # shared attn+mlp charged once per group in layer count below
+        return mamba
+    raise ValueError(cfg.family)
+
+
+def _shared_block_traffic(cfg: ModelConfig, tokens_local: int, seq: int,
+                          n_model: int) -> float:
+    d = cfg.d_model
+    t = tokens_local
+    f_eff = cfg.d_ff / n_model
+    resid = 6 * t * d
+    proj = t * (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.hd() / n_model
+    mlp = t * (2 * f_eff * 2 + 2 * d)
+    return (resid + 2 * proj + mlp) * BF16 + _attn_traffic(
+        cfg, t, seq) / n_model
+
+
+def hbm_bytes(cfg: ModelConfig, shape: InputShape, kind: str,
+              mesh_name: str) -> float:
+    n_pod, n_data, n_model = _chips(mesh_name)
+    batch_local = max(1, shape.global_batch // (n_pod * n_data))
+    d = cfg.d_model
+
+    if kind == "decode":
+        # one token: every active param read once + cache traffic
+        p = active_param_bytes_local(cfg, n_model, n_data)
+        if cfg.family in ("ssm", "hybrid"):
+            s = cfg.ssm
+            di = s.d_inner(d) / n_model
+            if cfg.family == "ssm":
+                state = cfg.n_layers * batch_local * di * s.d_state * F32
+            else:
+                nh = s.d_inner(d) // s.head_dim / n_model
+                state = cfg.n_layers * batch_local * nh * s.d_state * \
+                    s.head_dim * F32
+                W = min(shape.seq_len, cfg.window)
+                groups = cfg.n_layers // cfg.hybrid.attn_every
+                state += groups * batch_local * W * 2 * \
+                    cfg.n_kv_heads * cfg.hd() * BF16 / \
+                    (1 if cfg.n_kv_heads % n_model else n_model)
+            return p + 2 * state
+        W = min(shape.seq_len, cfg.window)
+        kv_shard = n_model  # heads or head_dim sharded
+        kv = cfg.n_layers * batch_local * W * 2 * cfg.n_kv_heads * \
+            cfg.hd() * BF16 / kv_shard
+        if cfg.family == "encdec":
+            kv += cfg.n_layers * batch_local * cfg.encdec.enc_seq * 2 * \
+                cfg.n_kv_heads * cfg.hd() * BF16 / kv_shard
+        return p + kv
+
+    # train / prefill
+    if cfg.family == "encdec":
+        seq = cfg.encdec.dec_seq
+        tokens_local = batch_local * (cfg.encdec.dec_seq +
+                                      shape.seq_len)  # dec + enc streams
+    elif cfg.family == "vlm":
+        seq = shape.seq_len
+        tokens_local = batch_local * shape.seq_len
+    else:
+        seq = shape.seq_len
+        tokens_local = batch_local * shape.seq_len
+    if cfg.seq_shard:
+        tokens_local //= n_model
+
+    layer_fwd = _layer_act_traffic(cfg, tokens_local, seq, n_model)
+    n_units = cfg.n_layers
+    if cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.hybrid.attn_every
+        layer_total = layer_fwd * cfg.n_layers + groups * \
+            _shared_block_traffic(cfg, tokens_local, seq, n_model)
+    else:
+        layer_total = layer_fwd * n_units
+
+    p_local = param_bytes_local(cfg, n_model, n_data)
+    embed_io = tokens_local * d * BF16 * 2
+    logits = tokens_local * cfg.vocab / n_model * F32 * 2
+
+    if kind == "prefill":
+        kv_write = cfg.n_layers * tokens_local * 2 * cfg.n_kv_heads * \
+            cfg.hd() * BF16 / n_model if cfg.n_heads else 0.0
+        # last-token logits only
+        return p_local + layer_total + embed_io + kv_write + \
+            batch_local * cfg.vocab / n_model * F32
+
+    # train: fwd + bwd(2×) + remat recompute(1×) on activations;
+    # params re-read per microbatch for fwd+bwd; grads f32 rw per
+    # microbatch; momentum + update once
+    n_micro = max(1, cfg.microbatches)
+    act = 4 * layer_total + 2 * embed_io + 2 * logits
+    params_traffic = n_micro * 3 * p_local
+    grad_traffic = n_micro * 2 * (p_local * 2)        # f32 rw per micro
+    opt_traffic = 3 * p_local                          # m rw + p write
+    return act + params_traffic + grad_traffic + opt_traffic

@@ -1,0 +1,103 @@
+"""Loop-free probe lowerings for exact HLO cost accounting.
+
+XLA's ``cost_analysis`` counts a ``while`` body ONCE, so the production
+lowering (scan-over-layers × microbatch scan × chunked-attention loops)
+under-reports FLOPs/bytes/collectives by large factors.  The probe:
+
+  1. rebuild the config with k ∈ {1, 2} layer-units, scans unrolled,
+     SSM recurrence in associative-scan form, attention single-chunk,
+     microbatches=1 (batch scaled down accordingly) — loop-free HLO;
+  2. cost(k) is affine in k:  cost(k) = fixed + k·per_unit, so
+     per_unit = cost(2) − cost(1), fixed = 2·cost(1) − cost(2) — exact;
+  3. extrapolate to the real unit count and multiply the train numbers
+     back by ``microbatches``.
+
+A layer-unit is one transformer/ssm layer (dense/moe/ssm), one
+(shared-attn + attn_every·mamba2) group (hybrid), or one enc+dec layer
+pair (encdec — exact because whisper has n_enc == n_dec).
+
+The fixed part (embedding, head, loss, optimiser update) is NOT
+microbatch-scaled for flops of the optimiser, a small conservative
+over-count for train (documented; < 1% for every assigned config).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import InputShape, ModelConfig
+from repro.roofline.analysis import collective_bytes
+
+
+def probe_config(cfg: ModelConfig, k: int,
+                 seq_len: int = 0) -> ModelConfig:
+    # attention chunk loops are unrolled; cap the number of unrolled
+    # chunk bodies at ~32 (8 q-chunks × 4 kv-chunks) so the 32k/500k
+    # shapes don't explode compile time — attention FLOPs are
+    # chunk-size-invariant, so the extrapolation is unaffected
+    kw = dict(unroll_layers=True, ssm_assoc=True, microbatches=1)
+    if seq_len:
+        kw["attn_chunk_q"] = max(cfg.attn_chunk_q, seq_len // 8)
+        kw["attn_chunk_k"] = max(cfg.attn_chunk_k, seq_len // 4)
+    if cfg.family == "hybrid":
+        kw["n_layers"] = k * cfg.hybrid.attn_every
+    else:
+        kw["n_layers"] = k
+    if cfg.encdec is not None:
+        kw["encdec"] = dataclasses.replace(cfg.encdec, n_enc_layers=k)
+    return cfg.replace(**kw)
+
+
+def probe_units(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.hybrid.attn_every
+    return cfg.n_layers
+
+
+def probe_shape(cfg: ModelConfig, shape: InputShape,
+                min_batch: int = 16) -> tuple:
+    """Probe with the per-microbatch batch (floored at the data-axis
+    size so it still shards); returns (shape, linear scale factor)."""
+    if shape.kind == "train" and cfg.microbatches > 1:
+        pb = max(min_batch, shape.global_batch // cfg.microbatches)
+        return (dataclasses.replace(shape, global_batch=pb),
+                shape.global_batch / pb)
+    return shape, 1.0
+
+
+def _extract(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(coll["weighted_total"]),
+        "coll_count": sum(coll["count"].values()),
+    }
+
+
+def probe_costs(build_fn, cfg: ModelConfig, shape: InputShape,
+                min_batch: int = 16) -> dict:
+    """``build_fn(probe_cfg, probe_shape) -> compiled`` (arch-agnostic,
+    supplied by the dry-run driver).  Returns extrapolated per-chip
+    flops/bytes and total collective bytes for the REAL config."""
+    ps, scale = probe_shape(cfg, shape, min_batch)
+    seq = shape.seq_len if shape.kind in ("train", "prefill") else 0
+    c1 = _extract(build_fn(probe_config(cfg, 1, seq), ps))
+    c2 = _extract(build_fn(probe_config(cfg, 2, seq), ps))
+    units = probe_units(cfg)
+
+    out = {}
+    for key in ("flops", "bytes", "coll"):
+        # clamp: XLA occasionally fuses collectives differently at k=2
+        # vs k=1, which would extrapolate negative
+        per_unit = max(0.0, c2[key] - c1[key])
+        fixed = max(0.0, 2 * c1[key] - c2[key])
+        total = fixed + per_unit * units
+        out[key] = total * scale
+        out[f"{key}_per_unit"] = per_unit
+        out[f"{key}_fixed"] = fixed
+    out["coll_count_probe"] = (c1["coll_count"], c2["coll_count"])
+    return out

@@ -1,0 +1,105 @@
+"""Tracing-time sharding-constraint context.
+
+The decode path's ring-buffer cache update (dynamic_update_slice at a
+runtime slot) leaves GSPMD free to reshard the cache between the update
+and the attention read; on the 405B decode baseline it chose full
+rematerialisation (~1.1 GB all-gather per layer — see EXPERIMENTS.md
+§Perf H2).  Installing :func:`use_rules` during tracing pins the cache
+leaves to the rules' sharding on both sides of the update so the DUS
+partitions in place.
+
+The context is a no-op when inactive (unit tests, CPU examples).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding
+
+_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def use_rules(rules):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def active() -> bool:
+    return getattr(_STATE, "rules", None) is not None
+
+
+def constrain_heads(x):
+    """Pin (B, S, H, hd) activations to head-parallel layout — the
+    explicit reshard point for seq-sharded training (§Perf H4): tells
+    GSPMD to all-to-all seq↔heads around attention instead of
+    replicating the attention compute."""
+    rules = getattr(_STATE, "rules", None)
+    if rules is None:
+        return x
+    from repro.sharding.rules import data_axes
+    da = data_axes(rules.mesh)
+    spec = rules.spec(x.shape, (da, None, "model", None))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def constrain_seq(x):
+    """Pin (B, S, d) activations to sequence-parallel layout."""
+    rules = getattr(_STATE, "rules", None)
+    if rules is None:
+        return x
+    from repro.sharding.rules import data_axes
+    da = data_axes(rules.mesh)
+    spec = rules.spec(x.shape, (da, "model", None))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def constrain_lastdim(x):
+    """Shard the last dim over ``model`` (batch over data), everything
+    else replicated — used to pin decode q to the cache's hd-sharded
+    layout so the QK einsum partially contracts instead of gathering K."""
+    rules = getattr(_STATE, "rules", None)
+    if rules is None:
+        return x
+    from repro.sharding.rules import data_axes
+    da = data_axes(rules.mesh)
+    spec = rules.spec(x.shape,
+                      (da,) + (None,) * (x.ndim - 2) + ("model",))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def constrain_scores(s):
+    """Pin decode attention scores (B, H, 1, W) replicated over the
+    model axis: forces GSPMD into partial-contraction + all-reduce of
+    the (small) scores instead of all-gathering the (huge) hd-sharded
+    KV cache (§Perf H2: 2.1 GB AG/layer -> 0.27 GB AR/layer, and the
+    qk/pv matmuls stay 16-way sharded)."""
+    rules = getattr(_STATE, "rules", None)
+    if rules is None:
+        return s
+    from repro.sharding.rules import data_axes
+    da = data_axes(rules.mesh)
+    spec = rules.spec(s.shape, (da,) + (None,) * (s.ndim - 1))
+    return jax.lax.with_sharding_constraint(
+        s, NamedSharding(rules.mesh, spec))
+
+
+def constrain_cache(x, name: str):
+    """Pin a KV/state cache leaf (per-layer view, no leading L axis)."""
+    rules = getattr(_STATE, "rules", None)
+    if rules is None:
+        return x
+    # per-layer leaf: prepend a dummy L dim for the rules' 5-D pattern
+    spec = rules.cache_spec(f"cache.{name}", (1,) + x.shape)
+    spec = jax.sharding.PartitionSpec(*spec[1:])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))

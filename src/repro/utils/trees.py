@@ -1,0 +1,131 @@
+"""Pytree utilities shared across the framework.
+
+Parameters everywhere in repro are nested dicts of jnp arrays.  Layer
+stacks use a leading ``L`` axis (scan-over-layers layout), produced by
+``stack_layers`` / consumed by ``jax.lax.scan``.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def tree_map(fn: Callable, *trees: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def tree_zeros_like(tree: Pytree, dtype=None) -> Pytree:
+    return tree_map(lambda x: jnp.zeros_like(x, dtype=dtype or x.dtype), tree)
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return tree_map(jnp.add, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(a: Pytree, s) -> Pytree:
+    return tree_map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x: Pytree, y: Pytree) -> Pytree:
+    """alpha * x + y."""
+    return tree_map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_dot(a: Pytree, b: Pytree):
+    """Global inner product across all leaves."""
+    leaves = tree_map(lambda x, y: jnp.vdot(x, y), a, b)
+    return jax.tree_util.tree_reduce(jnp.add, leaves)
+
+
+def tree_norm(a: Pytree):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_size(tree: Pytree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: Pytree) -> int:
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def tree_cast(tree: Pytree, dtype) -> Pytree:
+    return tree_map(lambda x: x.astype(dtype), tree)
+
+
+def stack_layers(layers: Iterable[Pytree]) -> Pytree:
+    """Stack a list of identical pytrees along a new leading axis."""
+    layers = list(layers)
+    return tree_map(lambda *xs: jnp.stack(xs, axis=0), *layers)
+
+
+def unstack_layers(stacked: Pytree, n: int) -> list[Pytree]:
+    return [tree_map(lambda x: x[i], stacked) for i in range(n)]
+
+
+def tree_paths(tree: Pytree) -> list[tuple[str, Any]]:
+    """Flatten to (dotted-path, leaf) pairs, dict keys joined by '.'."""
+    out: list[tuple[str, Any]] = []
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        out.append((".".join(parts), leaf))
+    return out
+
+
+def tree_from_paths(pairs: list[tuple[str, Any]]) -> Pytree:
+    """Inverse of tree_paths for dict-only trees."""
+    root: dict = {}
+    for path, leaf in pairs:
+        parts = path.split(".")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return root
+
+
+def map_with_path(fn: Callable[[str, Any], Any], tree: Pytree) -> Pytree:
+    """Map fn(path, leaf) -> new leaf over a tree, preserving structure."""
+
+    def _fn(path, leaf):
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return fn(".".join(parts), leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)
+
+
+def first_match(rules: list[tuple[str, Any]], path: str, default=None):
+    """Return the value of the first regex rule matching ``path``."""
+    for pattern, value in rules:
+        if re.search(pattern, path):
+            return value
+    return default

@@ -1,0 +1,94 @@
+"""LLM adapter: stack levels, projector shapes, aggregation effect."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.maecho import MAEchoConfig
+from repro.fl.llm_adapter import (aggregate_llm, build_projections,
+                                  default_llm_projections,
+                                  stack_levels_fn)
+from repro.models.config import InputShape
+from repro.models.zoo import get_model
+from repro.utils import trees
+
+ARCHS = ["llama3_8b", "qwen2_moe_a2_7b", "falcon_mamba_7b",
+         "zamba2_2_7b", "whisper_tiny", "phi3_vision_4_2b"]
+
+
+def _batch(m, cfg, seed=0):
+    specs = m.input_specs(InputShape("t", 32, 2, "train"))
+    rng = jax.random.PRNGKey(seed)
+    return {k: (jax.random.randint(rng, v.shape, 0, cfg.vocab
+                                   ).astype(jnp.int32)
+                if v.dtype == jnp.int32
+                else jax.random.normal(rng, v.shape, v.dtype) * 0.1)
+            for k, v in specs.items()}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_projection_shapes_match_rules(arch):
+    cfg = get_smoke_config(arch)
+    m = get_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    projs = build_projections(cfg, params, [_batch(m, cfg)])
+    lv = stack_levels_fn(cfg)
+
+    def check(path, leaf):
+        P = trees.tree_paths(projs)
+        return leaf
+
+    pairs_w = dict(trees.tree_paths(params))
+    pairs_p = dict(trees.tree_paths(projs))
+    assert set(pairs_w) == set(pairs_p)
+    for path, W in pairs_w.items():
+        P = pairs_p[path]
+        levels = lv(path)
+        base = W.shape[levels:]
+        if path == "embed":
+            assert P.shape == (cfg.vocab,)        # diag token support
+        elif P.ndim == levels + 2:                # full projector
+            d_in = base[0]
+            assert P.shape[-2:] == (d_in, d_in)
+            assert P.shape[:levels] == W.shape[:levels]
+        else:                                     # scalar rule
+            assert P.shape == W.shape[:levels]
+
+
+@pytest.mark.parametrize("arch", ["llama3_8b", "qwen2_moe_a2_7b"])
+def test_aggregation_preserves_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    m = get_model(cfg)
+    clients = [m.init_params(jax.random.PRNGKey(i)) for i in range(2)]
+    projs = [build_projections(cfg, p, [_batch(m, cfg, seed=i)])
+             for i, p in enumerate(clients)]
+    g = aggregate_llm(cfg, clients, projs, MAEchoConfig(tau=3, eta=0.5))
+    for (pw, w), (pg, gl) in zip(trees.tree_paths(clients[0]),
+                                 trees.tree_paths(g)):
+        assert w.shape == gl.shape, pw
+        assert np.all(np.isfinite(np.asarray(gl, np.float32))), pw
+
+
+def test_moe_expert_projectors_differ_by_expert():
+    """Per-expert P built from routed streams must not be identical
+    across experts (disjoint token subsets -> distinct row spaces)."""
+    cfg = get_smoke_config("qwen2_moe_a2_7b")
+    m = get_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    projs = build_projections(cfg, params, [_batch(m, cfg)])
+    P = dict(trees.tree_paths(projs))["layers.we_gate"]
+    assert P.ndim == 4                      # (L, E, d, d)
+    diffs = float(jnp.max(jnp.abs(P[0, 0] - P[0, 1])))
+    assert diffs > 1e-4
+
+
+def test_default_projections_token_support():
+    cfg = get_smoke_config("llama3_8b")
+    m = get_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    sup = jnp.zeros(cfg.vocab).at[:10].set(1.0)
+    projs = default_llm_projections(cfg, params, token_support=sup)
+    P = dict(trees.tree_paths(projs))["embed"]
+    assert P.shape == (cfg.vocab,)
+    assert float(P[:10].sum()) == 10.0 and float(P[10:].sum()) == 0.0

@@ -1,0 +1,202 @@
+"""Algorithm 1 semantics (paper §5) — unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import projections as proj
+from repro.core.maecho import (MAEchoConfig, default_projections,
+                               init_global, maecho_aggregate)
+from repro.utils import trees
+
+
+def _rand_client(seed, shape=(6, 4)):
+    k = jax.random.PRNGKey(seed)
+    return {"W": jax.random.normal(k, shape),
+            "b": jax.random.normal(jax.random.fold_in(k, 1),
+                                   (shape[0],))}
+
+
+def _proj_for(seed, d=4, n=12, alpha=1e-3):
+    X = jax.random.normal(jax.random.PRNGKey(100 + seed), (n, d))
+    return {"W": proj.projection_from_features(X, alpha),
+            "b": jnp.ones(())}
+
+
+def test_identical_clients_fixed_point():
+    """All clients equal ⇒ W⁽⁰⁾ = Wᵢ is Pareto critical: D = 0."""
+    c = _rand_client(0)
+    ps = [_proj_for(i) for i in range(3)]
+    out = maecho_aggregate([c, c, c], ps, MAEchoConfig(tau=5, eta=1.0))
+    np.testing.assert_allclose(np.asarray(out["W"]),
+                               np.asarray(c["W"]), atol=1e-5)
+
+
+def test_objective_decreases():
+    """Each sub-objective ‖Pᵢ(W − Vᵢ)‖² decreases vs the average init
+    (C=1 case of Prop. 1)."""
+    clients = [_rand_client(i) for i in range(3)]
+    projs = [_proj_for(i, n=2) for i in range(3)]   # low-rank P
+    W0 = init_global(clients, "average")
+    out, V = maecho_aggregate(clients, projs,
+                              MAEchoConfig(tau=30, eta=0.5),
+                              return_anchors=True)
+
+    def obj(W, Vs):
+        return sum(float(jnp.sum(jnp.square(
+            (W["W"] - Vs["W"][i]) @ projs[i]["W"]))) for i in range(3))
+
+    before = obj(W0, {"W": jnp.stack([c["W"] for c in clients])})
+    after = obj(out, V)
+    assert after < before * 0.5
+
+
+def test_null_space_knowledge_preserved():
+    """The aggregate's deviation from each local optimum stays (mostly)
+    out of that client's feature span — the forgetting-alleviation
+    mechanism."""
+    d = 8
+    clients, projs, Xs = [], [], []
+    for i in range(2):
+        X = jax.random.normal(jax.random.PRNGKey(i), (3, d))  # rank 3
+        Xs.append(X)
+        clients.append({"W": jax.random.normal(
+            jax.random.PRNGKey(10 + i), (5, d))})
+        projs.append({"W": proj.projection_from_features(X, 1e-4)})
+    # paper Fig. 8: large μ pins the anchors to their feature span;
+    # μ=1 (the default) trades some local fidelity for a wider search
+    out_hi, V_hi = maecho_aggregate(clients, projs,
+                                    MAEchoConfig(tau=50, eta=0.5,
+                                                 mu=200.0),
+                                    return_anchors=True)
+    out_lo, V_lo = maecho_aggregate(clients, projs,
+                                    MAEchoConfig(tau=50, eta=0.5,
+                                                 mu=1.0),
+                                    return_anchors=True)
+    for i in range(2):
+        def ratio(V):
+            drift = np.asarray(Xs[i] @ (V["W"][i] - clients[i]["W"]).T)
+            base = np.asarray(Xs[i] @ clients[i]["W"].T)
+            return np.abs(drift).max() / np.abs(base).max()
+
+        # μ=200: the anchor's function on client data is intact
+        assert ratio(V_hi) < 0.1
+        # μ=1 relaxes — strictly more in-span drift (Fig. 8 ordering)
+        assert ratio(V_lo) > ratio(V_hi)
+
+
+def test_default_projections_consensus():
+    """Scalar projectors everywhere ⇒ pure consensus pull; W stays
+    finite and between the clients."""
+    clients = [_rand_client(i) for i in range(4)]
+    out = maecho_aggregate(clients, None, MAEchoConfig(tau=10, eta=0.2))
+    lo = np.minimum.reduce([np.asarray(c["W"]) for c in clients]).min()
+    hi = np.maximum.reduce([np.asarray(c["W"]) for c in clients]).max()
+    W = np.asarray(out["W"])
+    assert np.all(np.isfinite(W))
+    assert W.min() >= lo - 1.0 and W.max() <= hi + 1.0
+
+
+@pytest.mark.parametrize("init", ["average", "first", "random"])
+def test_init_strategies(init):
+    clients = [_rand_client(i) for i in range(3)]
+    out = maecho_aggregate(clients, None,
+                           MAEchoConfig(tau=5, init=init),
+                           rng=jax.random.PRNGKey(7))
+    assert np.all(np.isfinite(np.asarray(out["W"])))
+
+
+def test_stacked_levels_match_unstacked():
+    """A stacked (L, out, in) leaf must aggregate exactly like L
+    separate leaves (the scan-over-layers LLM layout)."""
+    L = 3
+    clients_flat, projs_flat = [], []
+    for i in range(2):
+        ws = [jax.random.normal(jax.random.PRNGKey(10 * i + l), (6, 4))
+              for l in range(L)]
+        ps = [_proj_for(10 * i + l)["W"] for l in range(L)]
+        clients_flat.append((ws, ps))
+
+    # per-layer separate aggregation
+    outs = []
+    for l in range(L):
+        out = maecho_aggregate(
+            [{"W": clients_flat[0][0][l]}, {"W": clients_flat[1][0][l]}],
+            [{"W": clients_flat[0][1][l]}, {"W": clients_flat[1][1][l]}],
+            MAEchoConfig(tau=8, eta=0.5))
+        outs.append(out["W"])
+
+    # stacked aggregation
+    stacked = maecho_aggregate(
+        [{"W": jnp.stack(clients_flat[0][0])},
+         {"W": jnp.stack(clients_flat[1][0])}],
+        [{"W": jnp.stack(clients_flat[0][1])},
+         {"W": jnp.stack(clients_flat[1][1])}],
+        MAEchoConfig(tau=8, eta=0.5),
+        stack_levels=lambda path: 1)
+    np.testing.assert_allclose(np.asarray(stacked["W"]),
+                               np.asarray(jnp.stack(outs)), atol=1e-5)
+
+
+def test_conventions_agree_under_transpose():
+    """'oi' on W and 'io' on Wᵀ produce transposed-identical results."""
+    clients = [{"W": jax.random.normal(jax.random.PRNGKey(i), (6, 4))}
+               for i in range(2)]
+    projs = [_proj_for(i) for i in range(2)]
+    projs = [{"W": p["W"]} for p in projs]
+    a = maecho_aggregate(clients, projs, MAEchoConfig(tau=6, eta=0.5),
+                         convention="oi")
+    b = maecho_aggregate([{"W": c["W"].T} for c in clients], projs,
+                         MAEchoConfig(tau=6, eta=0.5), convention="io")
+    np.testing.assert_allclose(np.asarray(a["W"]),
+                               np.asarray(b["W"]).T, atol=1e-5)
+
+
+def test_diag_projector_embedding_rule():
+    """Diagonal P (token support): rows outside the client's support
+    are free to move; supported rows are anchored."""
+    vocab, d = 10, 4
+    emb = [jax.random.normal(jax.random.PRNGKey(i), (vocab, d))
+           for i in range(2)]
+    sup = [jnp.asarray(np.r_[np.ones(5), np.zeros(5)], jnp.float32),
+           jnp.asarray(np.r_[np.zeros(5), np.ones(5)], jnp.float32)]
+    out, V = maecho_aggregate(
+        [{"embed": e} for e in emb],
+        [{"embed": s} for s in sup],
+        MAEchoConfig(tau=20, eta=0.5, mu=200.0), convention="io",
+        return_anchors=True)
+    # client 0's supported rows: anchor pinned; unsupported rows free
+    d0 = np.abs(np.asarray(V["embed"][0] - emb[0]))
+    assert d0[:5].max() < 0.05 * d0[5:].max()
+
+
+def test_factored_projectors_match_full():
+    """P kept factored as U·diag(s)·Uᵀ through the compute (§Perf H3)
+    gives identical results at exact rank."""
+    clients, projs = [], []
+    for i in range(3):
+        X = jax.random.normal(jax.random.PRNGKey(i), (5, 8))
+        clients.append(_rand_client(10 + i, (6, 8)))
+        projs.append({"W": proj.projection_from_features(X, 1e-3),
+                      "b": jnp.ones(())})
+    full = maecho_aggregate(clients, projs, MAEchoConfig(tau=8, eta=0.5))
+    fact = [{"W": proj.factor_projection(p["W"], 8), "b": p["b"]}
+            for p in projs]
+    out = maecho_aggregate(clients, fact, MAEchoConfig(tau=8, eta=0.5))
+    np.testing.assert_allclose(np.asarray(full["W"]),
+                               np.asarray(out["W"]), atol=1e-4)
+    tree = proj.factor_projection_tree(projs[0], 4)
+    assert set(tree["W"]) == {"U", "s"}
+    assert tree["W"]["U"].shape == (8, 4)
+
+
+@given(st.integers(2, 5), st.floats(0.1, 1.0), st.integers(0, 20))
+@settings(max_examples=10, deadline=None)
+def test_always_finite(n_clients, eta, seed):
+    clients = [_rand_client(seed * 10 + i) for i in range(n_clients)]
+    projs = [_proj_for(seed * 10 + i) for i in range(n_clients)]
+    out = maecho_aggregate(clients, projs,
+                           MAEchoConfig(tau=10, eta=eta))
+    assert all(np.all(np.isfinite(np.asarray(x)))
+               for x in jax.tree_util.tree_leaves(out))

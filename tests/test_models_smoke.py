@@ -1,0 +1,162 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family
+configs, one forward + one train step + decode, shape and finiteness
+asserts, prefill↔decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import assigned_archs, get_config, get_smoke_config
+from repro.models.config import INPUT_SHAPES, InputShape
+from repro.models.zoo import get_model
+from repro.optim import sgd
+
+ARCHS = assigned_archs()
+SHAPE = InputShape("smoke", 32, 2, "train")
+
+
+def _batch(m, cfg, seed=0):
+    specs = m.input_specs(SHAPE)
+    rng = jax.random.PRNGKey(seed)
+    out = {}
+    for k, v in specs.items():
+        if v.dtype == jnp.int32:
+            out[k] = jax.random.randint(jax.random.fold_in(rng, hash(k) %
+                                                           1000),
+                                        v.shape, 0, cfg.vocab
+                                        ).astype(jnp.int32)
+        else:
+            out[k] = jax.random.normal(rng, v.shape, v.dtype) * 0.1
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The full configs carry the exact published numbers."""
+    cfg = get_config(arch)
+    expect = {
+        "llama3_8b": (32, 4096, 32, 8, 14336, 128256),
+        "qwen2_1_5b": (28, 1536, 12, 2, 8960, 151936),
+        "whisper_tiny": (4, 384, 6, 6, 1536, 51865),
+        "falcon_mamba_7b": (64, 4096, 0, 0, 0, 65024),
+        "phi3_vision_4_2b": (32, 3072, 32, 32, 8192, 32064),
+        "qwen2_moe_a2_7b": (24, 2048, 16, 16, 1408, 151936),
+        "llama3_405b": (126, 16384, 128, 8, 53248, 128256),
+        "zamba2_2_7b": (54, 2560, 32, 32, 10240, 32000),
+        "qwen2_0_5b": (24, 896, 14, 2, 4864, 151936),
+        "grok1_314b": (64, 6144, 48, 8, 32768, 131072),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expect
+    assert cfg.source
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_reduction_limits(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.n_layers <= 2 or (cfg.hybrid and cfg.n_layers <= 4)
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    m = get_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    batch = _batch(m, cfg)
+    loss = m.loss_fn(params, batch)
+    assert np.isfinite(float(loss))
+
+    opt = sgd(0.05, momentum=0.5)
+    step = jax.jit(m.make_train_step(opt))
+    p2, s2, l0 = step(params, opt.init(params), batch, jnp.int32(0))
+    _, _, l1 = step(p2, s2, batch, jnp.int32(1))
+    assert np.isfinite(float(l1))
+    assert float(l1) < float(l0)          # one step on same batch helps
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_steps_finite(arch):
+    cfg = get_smoke_config(arch)
+    m = get_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    cache = m.init_cache(2, 16)
+    tok = jnp.ones((2, 1), jnp.int32)
+    step = jax.jit(m.decode_step)
+    for pos in range(4):
+        logits, cache = step(params, cache, tok, jnp.int32(pos))
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ["llama3_8b", "qwen2_0_5b",
+                                  "falcon_mamba_7b", "qwen2_moe_a2_7b"])
+def test_prefill_then_decode_matches_forward(arch):
+    """prefill(prompt) + decode(next) must agree with a full forward
+    over prompt+next — the KV-cache/state plumbing correctness test."""
+    cfg = get_smoke_config(arch)
+    m = get_model(cfg)
+    params = m.init_params(jax.random.PRNGKey(0))
+    P = 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, P + 1), 0,
+                              cfg.vocab).astype(jnp.int32)
+    # full forward logits at position P-1 predict token P
+    full = m.forward(params, {"tokens": toks})
+    logits_full = full[:, P - 1]
+
+    logits_pre, cache = m.prefill(params, {"tokens": toks[:, :P]})
+    if arch == "qwen2_moe_a2_7b":
+        # MoE capacity-based token dropping depends on the token set, so
+        # prefill(P) vs forward(P+1) route differently by design; the
+        # exact check is at equal length:
+        same = m.forward(params, {"tokens": toks[:, :P]})[:, -1]
+        np.testing.assert_allclose(np.asarray(logits_pre[:, -1]),
+                                   np.asarray(same), atol=2e-3,
+                                   rtol=2e-3)
+    else:
+        np.testing.assert_allclose(np.asarray(logits_pre[:, -1]),
+                                   np.asarray(logits_full),
+                                   atol=2e-3, rtol=2e-3)
+    if arch in ("falcon_mamba_7b", "qwen2_moe_a2_7b"):
+        # ssm: decode continues from state (covered by prefill check);
+        # moe: single-token decode routes under capacity C=1 by design
+        return
+
+    # pad KV cache to a larger ring and decode one more token
+    W = 16
+    pad = W - cache["k"].shape[2]
+    cache = {k: (jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                 if k in ("k", "v") else v) for k, v in cache.items()}
+    logits_dec, _ = m.decode_step(params, cache, toks[:, P:P + 1],
+                                  jnp.int32(P))
+    full_next = m.forward(params, {"tokens": toks})[:, P]
+    np.testing.assert_allclose(np.asarray(logits_dec[:, 0]),
+                               np.asarray(full_next), atol=2e-3,
+                               rtol=2e-3)
+
+
+def test_sliding_window_ring_buffer():
+    """Ring-buffer decode: only the last ``window`` tokens attend."""
+    from repro.models.layers import init_kv_cache, update_kv_cache
+    cache = init_kv_cache(1, 4, 1, 8, jnp.float32)
+    for pos in range(7):
+        k = jnp.full((1, 1, 1, 8), float(pos))
+        cache, valid = update_kv_cache(cache, k, k, jnp.int32(pos))
+    # after 7 inserts into window 4: positions 3..6 valid
+    assert bool(jnp.all(valid))
+    slots = np.asarray(cache["k"][0, :, 0, 0])
+    assert sorted(slots.tolist()) == [3.0, 4.0, 5.0, 6.0]
+
+
+def test_input_specs_cover_all_shapes():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        m = get_model(cfg)
+        for name, shape in INPUT_SHAPES.items():
+            specs = m.input_specs(shape)
+            assert specs, (arch, name)
+            for leaf in jax.tree_util.tree_leaves(specs):
+                assert isinstance(leaf, jax.ShapeDtypeStruct)

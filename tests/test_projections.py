@@ -1,0 +1,82 @@
+"""Null-space projection properties (paper §4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import projections as proj
+
+
+@given(st.integers(4, 48), st.integers(2, 60), st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_block_matches_direct(d, n, seed):
+    X = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    Pd = proj.projection_direct(X, 1e-4)
+    Pb = proj.projection_from_features(X, 1e-4, block=7)
+    np.testing.assert_allclose(np.asarray(Pd), np.asarray(Pb),
+                               atol=2e-4)
+
+
+@given(st.integers(4, 32), st.integers(1, 20), st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_projector_properties(d, n, seed):
+    """P ≈ Pᵀ, eigenvalues in [0, 1], and P x ≈ x for x in row space."""
+    X = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    P = proj.projection_from_features(X, 1e-5)
+    P = np.asarray(P)
+    np.testing.assert_allclose(P, P.T, atol=1e-5)
+    w = np.linalg.eigvalsh(0.5 * (P + P.T))
+    assert w.min() > -1e-4 and w.max() < 1 + 1e-4
+    x = np.asarray(X)[0]
+    np.testing.assert_allclose(P @ x, x, rtol=0.05, atol=1e-2 *
+                               np.linalg.norm(x))
+
+
+def test_null_space_preserves_mapping():
+    """Paper's core mechanism: ΔW in the null space of X leaves X·w
+    unchanged."""
+    rng = jax.random.PRNGKey(0)
+    X = jax.random.normal(rng, (30, 16))
+    P = proj.projection_from_features(X, 1e-5)
+    I_P = jnp.eye(16) - P
+    delta = jax.random.normal(jax.random.PRNGKey(1), (16,))
+    delta_null = I_P @ delta
+    assert float(jnp.max(jnp.abs(X @ delta_null))) < 1e-2 * \
+        float(jnp.max(jnp.abs(X @ delta)))
+
+
+def test_streaming_continue_matches_oneshot():
+    X = jax.random.normal(jax.random.PRNGKey(2), (64, 12))
+    Q1 = proj.null_projector_from_features(X, 1e-3, block=16)
+    Q2 = proj.null_projector_init(12)
+    for s in range(0, 64, 16):
+        Q2 = proj.null_projector_from_features_continue(
+            Q2, X[s:s + 16], 1e-3, block=16)
+    np.testing.assert_allclose(np.asarray(Q1), np.asarray(Q2), atol=1e-5)
+
+
+@pytest.mark.parametrize("k,min_keep", [(16, 0.95), (8, 0.95), (4, 0.45)])
+def test_svd_compression(k, min_keep):
+    """Paper Table 6: heavy compression keeps most of the projector
+    when its energy is concentrated (the regime real features live in)."""
+    X = jax.random.normal(jax.random.PRNGKey(3), (200, 32))
+    # concentrate energy in a few directions
+    X = X * jnp.concatenate([jnp.ones(8) * 3, jnp.ones(24) * 0.01])
+    P = proj.projection_from_features(X, 1.0)
+    U, s = proj.svd_compress(P, k)
+    P2 = proj.svd_restore(U, s)
+    keep = float(jnp.trace(P2)) / float(jnp.trace(P))
+    assert keep >= min_keep * 0.9
+    assert proj.compression_ratio(32, k) < 1.0
+
+
+def test_owm_rank1_matches_block():
+    X = jax.random.normal(jax.random.PRNGKey(4), (8, 10))
+    Q1 = proj.null_projector_init(10)
+    for i in range(8):
+        Q1 = proj.owm_update(Q1, X[i], 1e-2)
+    Q2 = proj.null_projector_init(10)
+    Q2 = proj.block_update(Q2, X, 1e-2)
+    # rank-1 sequence and block differ only by regularisation ordering
+    np.testing.assert_allclose(np.asarray(Q1), np.asarray(Q2), atol=0.05)

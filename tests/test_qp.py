@@ -1,0 +1,67 @@
+"""Eq. 6 dual QP: projection + solver properties (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.qp import (project_capped_simplex, solve_qp,
+                           solve_qp_active_set)
+
+
+@given(st.integers(2, 30), st.floats(0.1, 1.0), st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_projection_feasible(n, c_frac, seed):
+    """Projection lands in {Σα=1, 0≤α≤C} whenever it is non-empty."""
+    C = max(c_frac, 1.0 / n + 1e-3)
+    x = np.random.RandomState(seed).randn(n) * 3
+    a = np.array(project_capped_simplex(jnp.asarray(x), C))
+    assert abs(a.sum() - 1.0) < 1e-4
+    assert a.min() >= -1e-6
+    assert a.max() <= C + 1e-5
+
+
+@given(st.integers(2, 30), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_projection_is_projection(n, seed):
+    """Projecting a feasible point returns it (within tolerance)."""
+    r = np.random.RandomState(seed)
+    a = r.dirichlet(np.ones(n))
+    out = np.array(project_capped_simplex(jnp.asarray(a), 1.0))
+    np.testing.assert_allclose(out, a, atol=1e-4)
+
+
+@given(st.integers(2, 12), st.integers(2, 24),
+       st.sampled_from([1.0, 0.5, 0.25]), st.integers(0, 50))
+@settings(max_examples=25, deadline=None)
+def test_pgd_matches_reference(n, d, C, seed):
+    """PGD objective within tolerance of the Frank-Wolfe oracle
+    (the paper's CVXOPT stand-in)."""
+    if C < 1.0 / n:
+        C = 1.0 / n + 1e-6
+    r = np.random.RandomState(seed)
+    A = r.randn(n, d)
+    G = A @ A.T
+    a_pgd = np.array(solve_qp(jnp.asarray(G), float(C), iters=500))
+    a_ref = solve_qp_active_set(G, float(C))
+    obj = lambda a: 0.5 * a @ G @ a
+    assert obj(a_pgd) <= obj(a_ref) * 1.05 + 1e-6
+    assert abs(a_pgd.sum() - 1) < 1e-4
+    assert a_pgd.max() <= C + 1e-4
+
+
+def test_capped_uniform():
+    """C = 1/N forces the uniform solution (paper Prop. 1 case 2)."""
+    r = np.random.RandomState(0)
+    A = r.randn(6, 8)
+    G = A @ A.T
+    a = np.array(solve_qp(jnp.asarray(G), 1.0 / 6, iters=300))
+    np.testing.assert_allclose(a, np.ones(6) / 6, atol=1e-3)
+
+
+def test_uncapped_matches_unconstrained_minimum():
+    """With C=1 the solution minimises ‖Σ αᵢ gᵢ‖ on the simplex."""
+    g = np.array([[2.0, 0.0], [-1.0, 0.0]])   # opposite directions
+    G = g @ g.T
+    a = np.array(solve_qp(jnp.asarray(G), 1.0, iters=500))
+    # minimiser: α = (1/3, 2/3) gives Σ α g = 0
+    np.testing.assert_allclose(a, [1 / 3, 2 / 3], atol=1e-3)

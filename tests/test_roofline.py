@@ -1,0 +1,140 @@
+"""Roofline machinery: HLO collective parser, three-term math,
+probe extrapolation, analytic memory model."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.config import INPUT_SHAPES
+from repro.roofline import memmodel
+from repro.roofline.analysis import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                     Roofline, collective_bytes,
+                                     model_flops)
+from repro.roofline.probe import probe_config, probe_units
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[16,1024,128]{2,1,0} parameter(0)
+  %ag = bf16[16,1024,2048]{2,1,0} all-gather(%p0), dimensions={2}
+  %ar = f32[256,256]{1,0} all-reduce(%x), to_apply=%sum
+  %rs = f32[16,64]{1,0} reduce-scatter(%y), dimensions={1}
+  %a2a = bf16[8,128]{1,0} all-to-all(%z), dimensions={0}
+  %cp = bf16[4,4]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %agd = bf16[2,2]{1,0} all-gather-done(%t)
+}
+"""
+
+
+def test_collective_parser_kinds_and_bytes():
+    out = collective_bytes(HLO)
+    c = out["count"]
+    assert c["all-gather"] == 1 and c["all-reduce"] == 1
+    assert c["reduce-scatter"] == 1 and c["all-to-all"] == 1
+    assert c["collective-permute"] == 1
+    b = out["bytes"]
+    assert b["all-gather"] == 16 * 1024 * 2048 * 2
+    assert b["all-reduce"] == 256 * 256 * 4
+    # weighted: AR counts 2x
+    expect = (b["all-gather"] + 2 * b["all-reduce"] +
+              b["reduce-scatter"] + b["all-to-all"] +
+              b["collective-permute"])
+    assert out["weighted_total"] == expect
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(arch="a", shape="s", mesh="m",
+                 flops_per_chip=PEAK_FLOPS,        # 1 s compute
+                 bytes_per_chip=HBM_BW * 10,       # 10 s HLO-UB
+                 coll_bytes_per_chip=ICI_BW * 0.5,
+                 model_flops=PEAK_FLOPS * 128,
+                 chips=256,
+                 bytes_model_per_chip=HBM_BW * 0.2)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory_model - 0.2) < 1e-9
+    assert r.bottleneck == "compute"    # model memory used, not HLO UB
+    assert 0 < r.mfu_bound <= 1.0
+
+
+def test_model_flops_train_decode():
+    cfg = get_config("llama3_8b")
+    tr = model_flops(cfg, INPUT_SHAPES["train_4k"], "train")
+    dec = model_flops(cfg, INPUT_SHAPES["decode_32k"], "decode")
+    assert tr / dec == pytest.approx(
+        3 * 256 * 4096 / 128, rel=1e-6)
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen2_moe_a2_7b")
+    assert cfg.n_active_params() < 0.35 * cfg.n_params()
+    dense = get_config("llama3_8b")
+    assert dense.n_active_params() == dense.n_params()
+
+
+@pytest.mark.parametrize("arch", ["llama3_8b", "qwen2_moe_a2_7b",
+                                  "falcon_mamba_7b", "zamba2_2_7b",
+                                  "whisper_tiny"])
+def test_probe_config_structure(arch):
+    cfg = get_config(arch)
+    for k in (1, 2):
+        p = probe_config(cfg, k, seq_len=32768)
+        assert p.unroll_layers and p.ssm_assoc
+        assert p.microbatches == 1
+        if cfg.family == "hybrid":
+            assert p.n_layers == k * cfg.hybrid.attn_every
+        else:
+            assert p.n_layers == k
+    assert probe_units(cfg) >= 4
+
+
+@pytest.mark.parametrize("arch", ["llama3_8b", "llama3_405b",
+                                  "qwen2_moe_a2_7b", "falcon_mamba_7b",
+                                  "zamba2_2_7b", "whisper_tiny",
+                                  "phi3_vision_4_2b"])
+@pytest.mark.parametrize("shape_name,kind", [
+    ("train_4k", "train"), ("prefill_32k", "prefill"),
+    ("decode_32k", "decode"), ("long_500k", "decode")])
+def test_memmodel_positive_and_sane(arch, shape_name, kind):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    b = memmodel.hbm_bytes(cfg, shape, kind, "16x16")
+    assert b > 0
+    # decode traffic must be at least the active params read
+    if kind == "decode":
+        assert b >= memmodel.active_param_bytes_local(cfg, 16, 16)
+    # train traffic exceeds prefill traffic (backward + optimiser)
+    if shape_name == "train_4k":
+        pre = memmodel.hbm_bytes(cfg, INPUT_SHAPES["prefill_32k"],
+                                 "prefill", "16x16")
+        assert b > 0.1 * pre    # sanity only: different shapes
+
+
+def test_memmodel_fsdp_reduces_param_traffic():
+    cfg = get_config("llama3_405b")
+    p_fsdp = memmodel.param_bytes_local(cfg, 16, 16)
+    p_tp = memmodel.param_bytes_local(cfg.replace(fsdp=False), 16, 16)
+    assert p_tp == pytest.approx(16 * p_fsdp)
+
+
+def test_probe_affine_extrapolation_math():
+    from repro.roofline.probe import probe_costs
+
+    class FakeCompiled:
+        def __init__(self, k):
+            self.k = k
+
+        def cost_analysis(self):
+            return {"flops": 100 + 7 * self.k,
+                    "bytes accessed": 10 + 3 * self.k}
+
+        def as_text(self):
+            return ""
+
+    cfg = get_config("llama3_8b").replace(microbatches=2)
+
+    def build(pcfg, pshape):
+        return FakeCompiled(pcfg.n_layers)
+
+    out = probe_costs(build, cfg, INPUT_SHAPES["train_4k"])
+    L = cfg.n_layers
+    assert out["flops"] == pytest.approx((100 + 7 * L) * 2)
+    assert out["bytes"] == pytest.approx((10 + 3 * L) * 2)

@@ -1,0 +1,144 @@
+"""Optimizer, checkpoint, data pipeline, tree utils."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.serialize import load, save
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import MNIST_LIKE, generate, lm_token_batches
+from repro.optim import adamw, clip_by_global_norm, cosine_schedule, sgd
+from repro.utils import trees
+
+
+# ----------------------------- optim ------------------------------------
+def _quad_problem():
+    target = jnp.asarray(np.random.RandomState(0).randn(8))
+    params = {"w": jnp.zeros(8)}
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"] - target))
+    return params, loss, target
+
+
+@pytest.mark.parametrize("opt", [sgd(0.1, momentum=0.5),
+                                 adamw(0.05)])
+def test_optimizers_converge(opt):
+    params, loss, target = _quad_problem()
+    state = opt.init(params)
+    for t in range(200):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, t)
+    np.testing.assert_allclose(np.asarray(params["w"]),
+                               np.asarray(target), atol=1e-2)
+
+
+def test_sgd_matches_paper_recipe():
+    """lr=0.01, momentum=0.5 — one handworked step."""
+    opt = sgd(0.01, momentum=0.5)
+    p = {"w": jnp.ones(2)}
+    s = opt.init(p)
+    g = {"w": jnp.asarray([1.0, 2.0])}
+    p1, s1 = opt.update(g, s, p, 0)
+    np.testing.assert_allclose(np.asarray(p1["w"]),
+                               [1 - 0.01, 1 - 0.02], atol=1e-7)
+    p2, _ = opt.update(g, s1, p1, 1)
+    # momentum: m = 0.5*g + g = 1.5g
+    np.testing.assert_allclose(np.asarray(p2["w"]),
+                               [1 - 0.01 - 0.015, 1 - 0.02 - 0.03],
+                               atol=1e-7)
+
+
+def test_cosine_schedule_shape():
+    sched = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(sched(0)) == 0.0
+    assert abs(float(sched(10)) - 1.0) < 1e-5
+    assert float(sched(100)) < float(sched(50)) < float(sched(10))
+
+
+def test_grad_clip():
+    g = {"a": jnp.ones(4) * 10}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(trees.tree_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) == 20.0
+
+
+# --------------------------- checkpoint ----------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": [jnp.ones(2, jnp.bfloat16), {"c": 3, "d": "x"}],
+            "e": (jnp.zeros(1), None)}
+    path = os.path.join(tmp_path, "ckpt.msgpack")
+    save(path, tree)
+    out = load(path)
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(tree["a"]))
+    assert out["b"][1] == {"c": 3, "d": "x"}
+    assert out["b"][0].dtype == jnp.bfloat16
+    assert isinstance(out["e"], tuple) and out["e"][1] is None
+
+
+# ------------------------------ data -------------------------------------
+def test_synthetic_learnable_and_low_rank():
+    data = generate(MNIST_LIKE)
+    X = data["train_x"][:1000]
+    s = np.linalg.svd(X - X.mean(0), compute_uv=False)
+    energy = np.cumsum(s ** 2) / np.sum(s ** 2)
+    eff_rank = int(np.searchsorted(energy, 0.95))
+    assert eff_rank < 80    # MNIST-like low effective rank (paper §6)
+    # classes are separable by a linear probe on the latent structure
+    assert len(np.unique(data["train_y"])) == 10
+
+
+@given(st.floats(0.01, 100.0), st.integers(2, 10), st.integers(0, 20))
+@settings(max_examples=15, deadline=None)
+def test_dirichlet_partition_properties(beta, n_clients, seed):
+    labels = np.random.RandomState(seed).randint(0, 10, size=2000)
+    parts = dirichlet_partition(labels, n_clients, beta, seed=seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(np.unique(allidx))   # disjoint
+    assert len(allidx) == len(labels)              # complete
+    assert min(len(p) for p in parts) >= 2
+
+
+def test_dirichlet_beta_controls_noniid():
+    labels = np.random.RandomState(0).randint(0, 10, size=5000)
+
+    def skew(beta):
+        parts = dirichlet_partition(labels, 5, beta, seed=1)
+        mats = np.stack([np.bincount(labels[p], minlength=10)
+                         for p in parts]).astype(float)
+        mats /= mats.sum(1, keepdims=True) + 1e-9
+        return float(np.abs(mats - 0.1).mean())
+
+    assert skew(0.01) > skew(100.0) * 2
+
+
+def test_lm_batches_deterministic_structure():
+    gen = lm_token_batches(100, 4, 32, 2, seed=0)
+    b1 = next(gen)
+    assert b1["tokens"].shape == (4, 32)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(np.asarray(b1["tokens"][:, 1:]),
+                                  np.asarray(b1["labels"][:, :-1]))
+
+
+# --------------------------- tree utils ----------------------------------
+def test_tree_paths_roundtrip():
+    tree = {"a": {"b": jnp.ones(2)}, "c": jnp.zeros(3)}
+    pairs = trees.tree_paths(tree)
+    assert sorted(p for p, _ in pairs) == ["a.b", "c"]
+    rebuilt = trees.tree_from_paths(pairs)
+    np.testing.assert_array_equal(np.asarray(rebuilt["a"]["b"]),
+                                  np.ones(2))
+
+
+def test_stack_unstack_layers():
+    layers = [{"w": jnp.ones(3) * i} for i in range(4)]
+    stacked = trees.stack_layers(layers)
+    assert stacked["w"].shape == (4, 3)
+    out = trees.unstack_layers(stacked, 4)
+    assert float(out[2]["w"][0]) == 2.0

@@ -29,6 +29,21 @@ def run(quick: bool = False):
                                                       0.5)), atol=1e-3)
     row("kernels/maecho_update_512x512_N5", us, f"allclose={ok}")
 
+    # maecho_gram / maecho_v_update (streaming-pipeline stages)
+    fn = jax.jit(lambda: ref.maecho_gram_ref(W, V, P))
+    fn()
+    _, us = timed(fn)
+    ok = np.allclose(np.asarray(ops.maecho_gram(W, V, P)),
+                     np.asarray(fn()), atol=1e-2, rtol=1e-4)
+    row("kernels/maecho_gram_512x512_N5", us, f"allclose={ok}")
+
+    fn = jax.jit(lambda: ref.maecho_v_update_ref(W, V, P, 0.5))
+    fn()
+    _, us = timed(fn)
+    ok = np.allclose(np.asarray(ops.maecho_v_update(W, V, P, frac=0.5)),
+                     np.asarray(fn()), atol=1e-3)
+    row("kernels/maecho_v_update_512x512_N5", us, f"allclose={ok}")
+
     # block-RLS
     d, b = 512, 64
     Q = jnp.eye(d)

@@ -1,0 +1,89 @@
+"""End-to-end MA-Echo aggregation benchmark (ISSUE 1 tentpole).
+
+Times full ``maecho_aggregate`` runs — Gram, QP, Eq. 7 and Eq. 11 per
+outer iteration — comparing the dense-projector jnp oracle against the
+factored-projector fast path at several layer sizes and ranks.  On
+this CPU-only container the oracle-vs-oracle wall clock is the
+meaningful hardware signal (interpret-mode Pallas timing is
+simulation); the fused kernel pipeline is additionally verified
+allclose against the oracle in interpret mode on a small config.
+
+Rows land in ``BENCH_maecho_agg.json`` via ``benchmarks.run`` — the
+perf trajectory future PRs compare against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core.maecho import MAEchoConfig, maecho_aggregate
+
+
+def _make_problem(out_d: int, in_d: int, rank: int, n_clients: int):
+    """Clients plus matching dense / factored projectors describing the
+    SAME operator P = U·diag(s)·Uᵀ (so the two paths solve one
+    problem and their outputs can be cross-checked)."""
+    k0 = jax.random.PRNGKey(out_d + in_d + rank)
+    clients, dense, fact = [], [], []
+    for i in range(n_clients):
+        k = jax.random.fold_in(k0, i)
+        W = jax.random.normal(k, (out_d, in_d)) * 0.3
+        b = jax.random.normal(jax.random.fold_in(k, 1), (out_d,)) * 0.1
+        U = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(k, 2),
+                                            (in_d, rank)))[0]
+        s = jax.random.uniform(jax.random.fold_in(k, 3), (rank,))
+        clients.append({"W": W, "b": b})
+        dense.append({"W": (U * s) @ U.T, "b": jnp.ones(())})
+        fact.append({"W": {"U": U, "s": s}, "b": jnp.ones(())})
+    return clients, dense, fact
+
+
+def _time_agg(clients, projs, cfg, backend, reps: int = 3):
+    fn = lambda: maecho_aggregate(clients, projs, cfg, backend=backend)  # noqa: E731
+    fn()                                    # compile
+    out, us = timed(fn)
+    for _ in range(reps - 1):               # best-of-reps: shed noise
+        _, u = timed(fn)
+        us = min(us, u)
+    return out, us
+
+
+def run(quick: bool = False):
+    N = 5
+    cfg = MAEchoConfig(tau=5 if quick else 10, eta=0.5, qp_iters=100)
+    sizes = [(512, 512, 64), (512, 512, 128)]
+    if not quick:
+        sizes += [(1024, 1024, 128), (1024, 1024, 256)]
+    for out_d, in_d, rank in sizes:
+        clients, dense, fact = _make_problem(out_d, in_d, rank, N)
+        wd, us_dense = _time_agg(clients, dense, cfg, "oracle")
+        wf, us_fact = _time_agg(clients, fact, cfg, "oracle")
+        agree = np.allclose(np.asarray(wd["W"]), np.asarray(wf["W"]),
+                            atol=1e-3)
+        tag = f"{out_d}x{in_d}_k{rank}_N{N}"
+        row(f"maecho_agg/dense_oracle_{tag}", us_dense, "")
+        row(f"maecho_agg/factored_oracle_{tag}", us_fact,
+            f"speedup={us_dense / max(us_fact, 1):.2f}x;match={agree}")
+
+    # fused kernel pipeline: allclose vs oracle (interpret mode) on a
+    # small config — correctness signal, not wall clock
+    clients, dense, fact = _make_problem(256, 256, 32, 3)
+    vcfg = MAEchoConfig(tau=2, eta=0.5, qp_iters=60)
+    w_oracle, _ = _time_agg(clients, dense, vcfg, "oracle")
+    w_kernel, us_k = _time_agg(clients, dense, vcfg, "kernel")
+    ok_dense = np.allclose(np.asarray(w_oracle["W"]),
+                           np.asarray(w_kernel["W"]), atol=1e-3)
+    row("maecho_agg/kernel_interpret_dense_256", us_k,
+        f"allclose={ok_dense}")
+    w_oracle, _ = _time_agg(clients, fact, vcfg, "oracle")
+    w_kernel, us_k = _time_agg(clients, fact, vcfg, "kernel")
+    ok_fact = np.allclose(np.asarray(w_oracle["W"]),
+                          np.asarray(w_kernel["W"]), atol=1e-3)
+    row("maecho_agg/kernel_interpret_factored_256", us_k,
+        f"allclose={ok_fact}")
+
+
+if __name__ == "__main__":
+    run()

@@ -4,10 +4,17 @@ Every benchmark mirrors one table/figure of the paper on the synthetic
 datasets (offline container — DESIGN.md §1) and emits CSV rows
 ``name,us_per_call,derived`` where ``derived`` carries the
 table-specific metric (usually accuracy).
+
+Rows are also collected in-process so ``benchmarks.run`` can persist
+each suite as ``BENCH_<suite>.json`` (run-over-run perf trajectory —
+every invocation appends a run entry; set ``REPRO_BENCH_DIR`` to move
+them off the repo root).
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 
 import jax
@@ -66,7 +73,51 @@ def ensemble_acc(spec, clients, data) -> float:
                          data["test_y"]))
 
 
+_ROWS: list[dict] = []
+
+
 def row(name: str, us: float, derived) -> str:
     line = f"{name},{us:.0f},{derived}"
     print(line, flush=True)
+    _ROWS.append({"name": name, "us_per_call": round(us),
+                  "derived": str(derived)})
     return line
+
+
+def drain_rows() -> list[dict]:
+    """Return and clear the rows collected since the last drain."""
+    out = list(_ROWS)
+    _ROWS.clear()
+    return out
+
+
+def persist_rows(suite: str, rows: list[dict], quick: bool) -> str:
+    """Append one run entry to BENCH_<suite>.json (perf trajectory).
+
+    Written atomically (temp file + rename); an unreadable existing
+    file is preserved as ``<path>.corrupt`` instead of silently
+    discarding the trajectory.
+    """
+    path = os.path.join(os.environ.get("REPRO_BENCH_DIR", "."),
+                        f"BENCH_{suite}.json")
+    runs = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                loaded = json.load(f)
+            runs = loaded["runs"]
+            if not isinstance(runs, list):
+                raise ValueError("runs is not a list")
+        except (OSError, ValueError, KeyError, TypeError):
+            runs = []
+            os.replace(path, path + ".corrupt")
+            print(f"# warning: unreadable {path} moved to "
+                  f"{path}.corrupt; starting a fresh trajectory",
+                  flush=True)
+    runs.append({"timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                 "quick": quick, "rows": rows})
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"suite": suite, "runs": runs}, f, indent=1)
+    os.replace(tmp, path)
+    return path

@@ -2,7 +2,10 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,...]``
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and persists each suite's
+rows as ``BENCH_<suite>.json`` (appending a run entry per invocation —
+the perf trajectory future PRs compare against; ``REPRO_BENCH_DIR``
+overrides the output directory).
 """
 from __future__ import annotations
 
@@ -10,10 +13,11 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_kernels, fig4_cvae, fig8_mu,
-                        fig9_multiround, roofline_report,
+from benchmarks import (bench_kernels, bench_maecho_agg, fig4_cvae,
+                        fig8_mu, fig9_multiround, roofline_report,
                         table1_multimodel, table4_beta_sweep,
                         table5_local_steps, table6_svd)
+from benchmarks.common import drain_rows, persist_rows
 
 SUITES = {
     "table1": table1_multimodel.run,
@@ -24,6 +28,7 @@ SUITES = {
     "fig8": fig8_mu.run,
     "fig9": fig9_multiround.run,
     "kernels": bench_kernels.run,
+    "maecho_agg": bench_maecho_agg.run,
     "roofline": roofline_report.run,
 }
 
@@ -36,6 +41,10 @@ def main() -> None:
     args = ap.parse_args()
 
     names = (args.only.split(",") if args.only else list(SUITES))
+    unknown = [n for n in names if n not in SUITES]
+    if unknown:
+        ap.error(f"unknown suite(s) {unknown}; choose from "
+                 f"{sorted(SUITES)}")
     print("name,us_per_call,derived")
     failures = 0
     for name in names:
@@ -43,6 +52,7 @@ def main() -> None:
         jax.clear_caches()       # cap XLA:CPU JIT dylib accumulation
         t0 = time.time()
         print(f"# suite {name}", flush=True)
+        drain_rows()
         try:
             SUITES[name](quick=args.quick)
         except Exception as e:  # noqa: BLE001
@@ -51,6 +61,10 @@ def main() -> None:
             print(f"{name}/SUITE_FAILED,0,{type(e).__name__}: {e}",
                   flush=True)
             traceback.print_exc()
+            # a crashed suite's partial rows are not a trajectory point
+            drain_rows()
+        else:
+            persist_rows(name, drain_rows(), args.quick)
         print(f"# suite {name} done in {time.time()-t0:.0f}s",
               flush=True)
     sys.exit(1 if failures else 0)

@@ -25,6 +25,32 @@ Projection leaves may be:
 
 Weight-leaf convention: ``convention="oi"`` (paper: W is (out, in), the
 MLP/CNN models) or ``"io"`` (the LLM zoo: x @ W, W is (in, out)).
+
+Backends — the ``backend`` argument of :func:`maecho_aggregate`:
+
+  - ``"oracle"`` (default): the reference jnp path below.  Each outer
+    iteration materializes the full (N, out, in) fp32 residual tensor
+    Rᵢ = (W − Vᵢ)Pᵢ twice (once for the Eq. 6/7 Gram+update, once
+    re-projected for Eq. 11) — 2·N·out·in fp32 of HBM traffic per
+    layer per iteration that exists only to be contracted away.
+  - ``"kernel"``: the fused streaming pipeline.  Eligible leaves (2-D,
+    unstacked) run three Pallas passes per iteration — ``maecho_gram``
+    (Eq. 6 Gram, residual tiles formed in VMEM and contracted on the
+    fly), ``maecho_update`` (Eq. 7) and ``maecho_v_update`` (Eq. 11)
+    — so no residual tensor is ever resident in HBM.  Factored
+    ``{"U", "s"}`` projectors stay factored through the compute: the
+    (N, out, k) compressed residual replaces the (N, out, in) full
+    one and every GEMM chain drops from O(out·in²) to O(out·in·k).
+    Ineligible leaves (1-D biases, stacked-layer leaves, shapes below
+    one tile) fall back to the oracle — dispatch happens at trace
+    time, the whole τ-loop still jits as one program.
+  - ``"auto"``: ``"kernel"`` for leaves big enough to tile
+    (min dim ≥ 128), ``"oracle"`` otherwise.
+
+The QP and the padding logic (``repro.kernels.ops._pad_to``, zero
+padding is exact for all three passes) are shared between backends;
+``REPRO_PALLAS_INTERPRET`` selects interpret-mode kernel execution
+(this container) vs real TPU lowering.
 """
 from __future__ import annotations
 
@@ -89,19 +115,10 @@ def _apply_P(delta, P, convention: str):
     return P @ delta                        # (in,in)@(in,out)
 
 
-def _leaf_step(W, V, P, cfg: MAEchoConfig, convention: str):
-    """One Algorithm-1 iteration for a single layer leaf.
-
-    W: (...,);  V: (N, ...);  P: (N, [in, in] | [in] | []).
-    Returns (W', V').
-    """
-    N = V.shape[0]
-    R = jax.vmap(lambda v, p: _apply_P(W - v, p, convention))(V, P)  # (N, ...)
-    Rf = R.reshape(N, -1).astype(jnp.float32)
-    G = Rf @ Rf.T                                                  # (N, N)
-
-    # Eq. 6 dual QP via accelerated PGD on the capped simplex (inlined so
-    # the whole aggregation jits as one program).
+def _qp_alpha(G, cfg: MAEchoConfig):
+    """Eq. 6 dual QP via accelerated PGD on the capped simplex (inlined
+    so the whole aggregation jits as one program)."""
+    N = G.shape[0]
     L = jnp.maximum(jnp.max(jnp.sum(jnp.abs(G), axis=1)), 1e-12)
     step = 1.0 / L
     a = project_capped_simplex(jnp.full((N,), 1.0 / N, jnp.float32), cfg.C)
@@ -115,6 +132,62 @@ def _leaf_step(W, V, P, cfg: MAEchoConfig, convention: str):
 
     alpha, _, _ = jax.lax.fori_loop(
         0, cfg.qp_iters, qp_body, (a, a, jnp.float32(1.0)))
+    return alpha
+
+
+def _kernel_eligible(W, P) -> bool:
+    """Leaf shapes the fused streaming pipeline handles: a 2-D weight
+    with a scalar / diagonal / dense / factored projector."""
+    if getattr(W, "ndim", 0) != 2:
+        return False
+    if isinstance(P, dict):
+        return set(P) == {"U", "s"} and P["U"].ndim == 3
+    return P.ndim in (1, 2, 3)
+
+
+def _leaf_step_kernel(W, V, P, cfg: MAEchoConfig, convention: str):
+    """One Algorithm-1 iteration through the fused streaming pipeline:
+    gram → QP → Eq. 7 update → Eq. 11 anchor update, each a single
+    Pallas pass with residual tiles formed in VMEM (module docstring;
+    the padding/kind dispatch and the factored-path compressed-residual
+    sharing live in ``ops.maecho_streaming_step``).  Kernels are
+    "oi"-native; "io" leaves are transposed around the call (XLA fuses
+    the transposes into the kernels' operand loads)."""
+    from repro.kernels import ops
+
+    if convention == "io":
+        Wk, Vk = W.T, jnp.swapaxes(V, 1, 2)
+        # oracle applies delta·P from the left for "io": (PᵢΔ)ᵀ = ΔᵀPᵢᵀ
+        Pk = jnp.swapaxes(P, 1, 2) if (not isinstance(P, dict)
+                                       and P.ndim == 3) else P
+    else:
+        Wk, Vk, Pk = W, V, P
+
+    W_new, V_new = ops.maecho_streaming_step(
+        Wk, Vk, Pk, lambda G: _qp_alpha(G, cfg), eta=cfg.eta,
+        frac=cfg.mu / (1.0 + cfg.mu), norm=cfg.norm, eps=cfg.eps)
+    if convention == "io":
+        return W_new.T, jnp.swapaxes(V_new, 1, 2)
+    return W_new, V_new
+
+
+def _leaf_step(W, V, P, cfg: MAEchoConfig, convention: str,
+               backend: str = "oracle"):
+    """One Algorithm-1 iteration for a single layer leaf.
+
+    W: (...,);  V: (N, ...);  P: (N, [in, in] | [in] | []).
+    Returns (W', V').
+    """
+    if backend != "oracle" and _kernel_eligible(W, P):
+        from repro.kernels.ops import DEFAULT_BLOCK
+        if backend == "kernel" or min(W.shape) >= DEFAULT_BLOCK:
+            return _leaf_step_kernel(W, V, P, cfg, convention)
+    N = V.shape[0]
+    R = jax.vmap(lambda v, p: _apply_P(W - v, p, convention))(V, P)  # (N, ...)
+    Rf = R.reshape(N, -1).astype(jnp.float32)
+    G = Rf @ Rf.T                                                  # (N, N)
+
+    alpha = _qp_alpha(G, cfg)
 
     D = -2.0 * jnp.tensordot(alpha, R.astype(jnp.float32), axes=(0, 0))
     W_new = (W.astype(jnp.float32) + cfg.eta * D).astype(W.dtype)
@@ -137,16 +210,18 @@ def _leaf_step(W, V, P, cfg: MAEchoConfig, convention: str):
 
 
 def _dispatch_leaf(W, V, P, cfg: MAEchoConfig, convention: str,
-                   levels: int = 0):
+                   levels: int = 0, backend: str = "oracle"):
     """``levels`` leading stacked-layer axes are vmapped away; the QP is
-    then solved per scanned layer, matching the paper's per-layer loop."""
+    then solved per scanned layer, matching the paper's per-layer loop.
+    Stacked leaves stay on the oracle (Pallas under vmap is an open
+    item — ROADMAP)."""
     if levels > 0:
         # V/P: (N, L, ...) -> vmap over L (axis 1 of V/P, axis 0 of W)
         return jax.vmap(
             lambda w, v, p: _dispatch_leaf(w, v, p, cfg, convention,
-                                           levels - 1),
+                                           levels - 1, "oracle"),
             in_axes=(0, 1, 1), out_axes=(0, 1))(W, V, P)
-    return _leaf_step(W, V, P, cfg, convention)
+    return _leaf_step(W, V, P, cfg, convention, backend)
 
 
 # --------------------------------------------------------------------------
@@ -179,15 +254,16 @@ def init_global(client_weights: list[Pytree], how: str,
     raise ValueError(f"unknown init {how!r}")
 
 
-@partial(jax.jit, static_argnames=("cfg", "convention", "levels"))
+@partial(jax.jit, static_argnames=("cfg", "convention", "levels",
+                                   "backend"))
 def _maecho_jit(W0, V0, P, cfg: MAEchoConfig, convention: str,
-                levels: tuple):
+                levels: tuple, backend: str = "oracle"):
     def outer(_, state):
         W, V = state
         flatW, treedef = jax.tree_util.tree_flatten(W)
         flatV = treedef.flatten_up_to(V)
         flatP = treedef.flatten_up_to(P)
-        out = [_dispatch_leaf(w, v, p, cfg, convention, lv)
+        out = [_dispatch_leaf(w, v, p, cfg, convention, lv, backend)
                for w, v, p, lv in zip(flatW, flatV, flatP, levels)]
         W = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
         V = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
@@ -212,6 +288,7 @@ def maecho_aggregate(
     rng: Optional[jax.Array] = None,
     stack_levels=None,
     return_anchors: bool = False,
+    backend: str = "oracle",
 ):
     """Run Algorithm 1.  Returns the global model pytree.
 
@@ -222,7 +299,12 @@ def maecho_aggregate(
                     ``None`` (all 0, the paper's MLP/CNN layout), a
                     pytree of ints matching the weights, or a callable
                     ``path -> int`` (the LLM scan-over-layers layout).
+    backend:        ``"oracle"`` | ``"kernel"`` | ``"auto"`` — the jnp
+                    reference path vs the fused streaming Pallas
+                    pipeline (module docstring).
     """
+    if backend not in ("oracle", "kernel", "auto"):
+        raise ValueError(f"unknown backend {backend!r}")
     if projections is None:
         projections = default_projections(client_weights)
     W0 = (init_point if init_point is not None
@@ -237,5 +319,5 @@ def maecho_aggregate(
     levels = tuple(jax.tree_util.tree_leaves(levels_tree))
     V0 = trees.tree_map(lambda *xs: jnp.stack(xs, 0), *client_weights)
     P = trees.tree_map(lambda *xs: jnp.stack(xs, 0), *projections)
-    W, V = _maecho_jit(W0, V0, P, cfg, convention, levels)
+    W, V = _maecho_jit(W0, V0, P, cfg, convention, levels, backend)
     return (W, V) if return_anchors else W

@@ -1,0 +1,239 @@
+"""Pallas TPU kernel: Gram matrix of projected MA-Echo residuals.
+
+The Eq. 6 QP needs the (N, N) table  G[i, j] = ⟨Rᵢ, Rⱼ⟩  with
+Rᵢ = (W − Vᵢ)Pᵢ.  The naive path materializes the full (N, out, in)
+fp32 residual tensor in HBM just to contract it down to N² scalars.
+This kernel streams instead: per (out, in) output tile it builds each
+client's residual tile **in VMEM** — the (W − Vᵢ) difference is formed
+in-register and contracted against Pᵢ's (bk, bi) blocks on the fly —
+then folds all N×N pairwise tile dot products into an (N, N) VMEM
+accumulator.  Nothing of size out×in is ever written to HBM.
+
+Grid: (n_out, n_in, N, n_k).  The two inner axes build one client's
+residual tile (k is the GEMM reduction over the projector's rows); the
+finished tile is parked in the (N, bo, bi) ``rstore`` scratch, and once
+all clients' tiles for this (o, j) position exist, one batched
+double-contraction adds their pairwise products to the Gram
+accumulator.  Scratch persists across the whole grid; the Gram table
+is written exactly once, at the final step.
+
+Variants (all share the accumulate/finalize tail):
+  - ``maecho_gram``:          dense (N, in, in) projectors;
+  - ``maecho_gram_factored``: Pᵢ = Uᵢ·diag(sᵢ)·Uᵢᵀ kept factored — the
+    residual tile is Aᵢ @ Uᵢᵀ with Aᵢ = ((W − Vᵢ)Uᵢ)·diag(sᵢ) formed
+    once as the (N, out, k) *compressed* residual, dropping the GEMM
+    chain from O(out·in²) to O(out·in·k) (paper §7.3: projectors are
+    low-rank);
+  - ``maecho_gram_diag``:     1-D per-client diagonal projectors
+    (embedding token support / broadcast scalar rule) — elementwise
+    residuals, single fused pass, no reduction axis.
+
+VMEM budget: rstore is N·bo·bi fp32 — with the default 128×128 blocks
+that caps N around 40 per core (the paper runs N ≤ 50; shrink ``bo``
+for larger cohorts).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gram_tail(resid, out_ref, racc_ref, rstore_ref, gacc_ref,
+               n_clients: int, n_k: int):
+    """Shared accumulate/park/contract/finalize logic.
+
+    ``resid`` is this (client, k-block)'s partial-residual contribution
+    (bo, bi) in fp32; callers form it from their own operands.
+    """
+    o, j, i, k = (pl.program_id(t) for t in range(4))
+    n_out, n_in = pl.num_programs(0), pl.num_programs(1)
+
+    @pl.when((o == 0) & (j == 0) & (i == 0) & (k == 0))
+    def _init_gram():
+        gacc_ref[...] = jnp.zeros_like(gacc_ref)
+
+    @pl.when(k == 0)
+    def _init_tile():
+        racc_ref[...] = jnp.zeros_like(racc_ref)
+
+    racc_ref[...] += resid
+
+    @pl.when(k == n_k - 1)
+    def _park_tile():
+        rstore_ref[i] = racc_ref[...]
+
+    @pl.when((i == n_clients - 1) & (k == n_k - 1))
+    def _contract_pairs():
+        r = rstore_ref[...]                       # (N, bo, bi)
+        gacc_ref[...] += jax.lax.dot_general(
+            r, r, (((1, 2), (1, 2)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when((o == n_out - 1) & (j == n_in - 1) &
+             (i == n_clients - 1) & (k == n_k - 1))
+    def _finalize():
+        out_ref[...] = gacc_ref[...].astype(out_ref.dtype)
+
+
+def _gram_kernel_dense(w_ref, v_ref, p_ref, out_ref,
+                       racc_ref, rstore_ref, gacc_ref,
+                       *, n_clients: int, n_k: int):
+    resid = jax.lax.dot((w_ref[...] - v_ref[...]).astype(jnp.float32),
+                        p_ref[...].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    _gram_tail(resid, out_ref, racc_ref, rstore_ref, gacc_ref,
+               n_clients, n_k)
+
+
+def _gram_kernel_left(a_ref, ut_ref, out_ref,
+                      racc_ref, rstore_ref, gacc_ref,
+                      *, n_clients: int, n_k: int):
+    """Residual given as a left factor: Rᵢ = Aᵢ @ (right)ᵢ."""
+    resid = jax.lax.dot(a_ref[...].astype(jnp.float32),
+                        ut_ref[...].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    _gram_tail(resid, out_ref, racc_ref, rstore_ref, gacc_ref,
+               n_clients, n_k)
+
+
+@functools.partial(jax.jit, static_argnames=("bo", "bi", "bk",
+                                             "interpret"))
+def maecho_gram(W, V, P, *, bo: int = 128, bi: int = 128, bk: int = 128,
+                interpret: bool = True):
+    """W: (out, in); V: (N, out, in); P: (N, in, in) dense.
+
+    Returns the fp32 (N, N) Gram matrix of projected residuals.
+    """
+    out_d, in_d = W.shape
+    N = V.shape[0]
+    bo, bi, bk = min(bo, out_d), min(bi, in_d), min(bk, in_d)
+    assert out_d % bo == 0 and in_d % bi == 0 and in_d % bk == 0, (
+        "pad layer dims to block multiples (ops.maecho_gram_auto)")
+    n_out, n_in, n_k = out_d // bo, in_d // bi, in_d // bk
+    kernel = functools.partial(_gram_kernel_dense, n_clients=N, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_out, n_in, N, n_k),
+        in_specs=[
+            pl.BlockSpec((bo, bk), lambda o, j, i, k: (o, k)),          # W
+            pl.BlockSpec((None, bo, bk), lambda o, j, i, k: (i, o, k)),  # V
+            pl.BlockSpec((None, bk, bi), lambda o, j, i, k: (i, k, j)),  # P
+        ],
+        out_specs=pl.BlockSpec((N, N), lambda o, j, i, k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bo, bi), jnp.float32),
+                        pltpu.VMEM((N, bo, bi), jnp.float32),
+                        pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(W, V, P)
+
+
+def compressed_residual(W, V, U, s):
+    """Aᵢ = ((W − Vᵢ)Uᵢ)·diag(sᵢ): the (N, out, k) compressed residual.
+
+    Formed as W@Uᵢ − Vᵢ@Uᵢ so the (N, out, in) full residual is never
+    materialized — only its rank-k image, which IS the factored-path
+    working set.
+    """
+    A = (jnp.einsum("oi,nik->nok", W.astype(jnp.float32),
+                    U.astype(jnp.float32))
+         - jnp.einsum("noi,nik->nok", V.astype(jnp.float32),
+                      U.astype(jnp.float32)))
+    return A * s[:, None, :].astype(jnp.float32)
+
+
+def maecho_gram_factored(W, V, U, s, *, bo: int = 128, bi: int = 128,
+                         bk: int = 128, interpret: bool = True):
+    """Factored projectors Pᵢ = Uᵢ·diag(sᵢ)·Uᵢᵀ.
+
+    W: (out, in); V: (N, out, in); U: (N, in, k); s: (N, k).
+    The kernel streams Rᵢ tiles as Aᵢ @ Uᵢᵀ (reduction over k, not in).
+    """
+    A = compressed_residual(W, V, U, s)
+    UT = jnp.swapaxes(U, 1, 2).astype(jnp.float32)       # (N, k, in)
+    return maecho_gram_left(A, UT, bo=bo, bi=bi, bk=bk,
+                            interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bo", "bi", "bk",
+                                             "interpret"))
+def maecho_gram_left(A, UT, *, bo: int = 128, bi: int = 128,
+                     bk: int = 128, interpret: bool = True):
+    """Gram from pre-factored residuals Rᵢ = Aᵢ @ UTᵢ.
+
+    A: (N, out, k) compressed residual; UT: (N, k, in).  Callers that
+    also run the Eq. 7 update can share one ``compressed_residual``.
+    """
+    N, out_d, kd = A.shape
+    in_d = UT.shape[2]
+    bo, bi, bk = min(bo, out_d), min(bi, in_d), min(bk, kd)
+    assert out_d % bo == 0 and in_d % bi == 0 and kd % bk == 0, (
+        "pad layer dims / rank to block multiples")
+    n_out, n_in, n_k = out_d // bo, in_d // bi, kd // bk
+    kernel = functools.partial(_gram_kernel_left, n_clients=N, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_out, n_in, N, n_k),
+        in_specs=[
+            pl.BlockSpec((None, bo, bk), lambda o, j, i, k: (i, o, k)),  # A
+            pl.BlockSpec((None, bk, bi), lambda o, j, i, k: (i, k, j)),  # Uᵀ
+        ],
+        out_specs=pl.BlockSpec((N, N), lambda o, j, i, k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bo, bi), jnp.float32),
+                        pltpu.VMEM((N, bo, bi), jnp.float32),
+                        pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(A, UT)
+
+
+def _gram_diag_kernel(w_ref, v_ref, p_ref, out_ref, gacc_ref,
+                      *, n_clients: int):
+    o, j = pl.program_id(0), pl.program_id(1)
+    n_out, n_in = pl.num_programs(0), pl.num_programs(1)
+
+    @pl.when((o == 0) & (j == 0))
+    def _init():
+        gacc_ref[...] = jnp.zeros_like(gacc_ref)
+
+    w = w_ref[...].astype(jnp.float32)                   # (bo, bi)
+    v = v_ref[...].astype(jnp.float32)                   # (N, bo, bi)
+    p = p_ref[...].astype(jnp.float32)                   # (N, 1, bi)
+    r = (w[None] - v) * p
+    gacc_ref[...] += jax.lax.dot_general(
+        r, r, (((1, 2), (1, 2)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when((o == n_out - 1) & (j == n_in - 1))
+    def _finalize():
+        out_ref[...] = gacc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bo", "bi", "interpret"))
+def maecho_gram_diag(W, V, p, *, bo: int = 128, bi: int = 128,
+                     interpret: bool = True):
+    """Diagonal projectors.  W: (out, in); V: (N, out, in); p: (N, in)."""
+    out_d, in_d = W.shape
+    N = V.shape[0]
+    bo, bi = min(bo, out_d), min(bi, in_d)
+    assert out_d % bo == 0 and in_d % bi == 0, (
+        "pad layer dims to block multiples")
+    p3 = p.reshape(N, 1, in_d)
+    kernel = functools.partial(_gram_diag_kernel, n_clients=N)
+    return pl.pallas_call(
+        kernel,
+        grid=(out_d // bo, in_d // bi),
+        in_specs=[
+            pl.BlockSpec((bo, bi), lambda o, j: (o, j)),           # W
+            pl.BlockSpec((N, bo, bi), lambda o, j: (0, o, j)),     # V
+            pl.BlockSpec((N, 1, bi), lambda o, j: (0, 0, j)),      # p
+        ],
+        out_specs=pl.BlockSpec((N, N), lambda o, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(W, V, p3)

@@ -12,6 +12,14 @@ in-register — the fusion the paper's hot loop wants (DESIGN.md §6).
 
 Grid: (n_out, n_in, N, n_k); scratch persists across the two inner
 axes.  Block shapes (bo, bk) / (bk, bi) / (bo, bi), 128-aligned.
+
+Fast paths matching ``maecho_gram`` / ``maecho_v_update``:
+  - ``maecho_update_factored``: Pᵢ = Uᵢ·diag(sᵢ)·Uᵢᵀ kept factored —
+    the per-client GEMM contracts the (N, out, k) compressed residual
+    Aᵢ = ((W − Vᵢ)Uᵢ)·diag(sᵢ) against Uᵢᵀ, reduction over the rank k
+    instead of in (O(out·in·k) per client);
+  - ``maecho_update_diag``: 1-D projectors, single elementwise pass,
+    no scratch.
 """
 from __future__ import annotations
 
@@ -79,3 +87,105 @@ def maecho_update(W, V, P, alpha, *, eta: float = 1.0, bo: int = 128,
         scratch_shapes=[pltpu.VMEM((bo, bi), jnp.float32)],
         interpret=interpret,
     )(alpha, W, V, P, W)
+
+
+def _left_kernel(alpha_ref, a_ref, ut_ref, wout_ref, out_ref, acc_ref,
+                 *, eta: float, n_clients: int, n_k: int):
+    """Residual given as a left factor: (W − Vᵢ)Pᵢ = Aᵢ @ Uᵢᵀ."""
+    i = pl.program_id(2)
+    k = pl.program_id(3)
+
+    @pl.when((i == 0) & (k == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a_i = alpha_ref[i]
+    acc_ref[...] += -2.0 * a_i * jax.lax.dot(
+        a_ref[...].astype(jnp.float32), ut_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+
+    @pl.when((i == n_clients - 1) & (k == n_k - 1))
+    def _finalize():
+        out_ref[...] = (wout_ref[...].astype(jnp.float32)
+                        + eta * acc_ref[...]).astype(out_ref.dtype)
+
+
+def maecho_update_factored(W, V, U, s, alpha, *, eta: float = 1.0,
+                           bo: int = 128, bi: int = 128, bk: int = 128,
+                           interpret: bool = True):
+    """Factored Pᵢ = Uᵢ·diag(sᵢ)·Uᵢᵀ.  U: (N, in, k); s: (N, k)."""
+    from repro.kernels.maecho_gram import compressed_residual
+
+    A = compressed_residual(W, V, U, s)                  # (N, out, k)
+    UT = jnp.swapaxes(U, 1, 2).astype(jnp.float32)       # (N, k, in)
+    return maecho_update_left(W, A, UT, alpha, eta=eta, bo=bo, bi=bi,
+                              bk=bk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "bo", "bi", "bk",
+                                             "interpret"))
+def maecho_update_left(W, A, UT, alpha, *, eta: float = 1.0,
+                       bo: int = 128, bi: int = 128, bk: int = 128,
+                       interpret: bool = True):
+    """Eq. 7 from pre-factored residuals Rᵢ = Aᵢ @ UTᵢ (shareable with
+    ``maecho_gram_left`` — one ``compressed_residual`` per iteration)."""
+    out_d, in_d = W.shape
+    N, _, kd = A.shape
+    bo, bi, bk = min(bo, out_d), min(bi, in_d), min(bk, kd)
+    assert out_d % bo == 0 and in_d % bi == 0 and kd % bk == 0, (
+        "pad layer dims / rank to block multiples")
+    n_out, n_in, n_k = out_d // bo, in_d // bi, kd // bk
+    kernel = functools.partial(_left_kernel, eta=eta, n_clients=N,
+                               n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_out, n_in, N, n_k),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                   # alpha
+            pl.BlockSpec((None, bo, bk), lambda o, j, i, k: (i, o, k)),  # A
+            pl.BlockSpec((None, bk, bi), lambda o, j, i, k: (i, k, j)),  # Uᵀ
+            pl.BlockSpec((bo, bi), lambda o, j, i, k: (o, j)),       # W (out)
+        ],
+        out_specs=pl.BlockSpec((bo, bi), lambda o, j, i, k: (o, j)),
+        out_shape=jax.ShapeDtypeStruct((out_d, in_d), W.dtype),
+        scratch_shapes=[pltpu.VMEM((bo, bi), jnp.float32)],
+        interpret=interpret,
+    )(alpha, A, UT, W)
+
+
+def _diag_kernel(w_ref, v_ref, p_ref, alpha_ref, out_ref, *, eta: float):
+    w = w_ref[...].astype(jnp.float32)                   # (bo, bi)
+    v = v_ref[...].astype(jnp.float32)                   # (N, bo, bi)
+    p = p_ref[...].astype(jnp.float32)                   # (N, 1, bi)
+    a = alpha_ref[...].astype(jnp.float32)               # (N, 1, 1)
+    d = jnp.sum(-2.0 * a * (w[None] - v) * p, axis=0)
+    out_ref[...] = (w + eta * d).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "bo", "bi",
+                                             "interpret"))
+def maecho_update_diag(W, V, p, alpha, *, eta: float = 1.0,
+                       bo: int = 128, bi: int = 128,
+                       interpret: bool = True):
+    """Diagonal projectors.  p: (N, in); alpha: (N,)."""
+    out_d, in_d = W.shape
+    N = V.shape[0]
+    bo, bi = min(bo, out_d), min(bi, in_d)
+    assert out_d % bo == 0 and in_d % bi == 0, (
+        "pad layer dims to block multiples")
+    p3 = p.reshape(N, 1, in_d)
+    a3 = alpha.reshape(N, 1, 1).astype(jnp.float32)
+    kernel = functools.partial(_diag_kernel, eta=eta)
+    return pl.pallas_call(
+        kernel,
+        grid=(out_d // bo, in_d // bi),
+        in_specs=[
+            pl.BlockSpec((bo, bi), lambda o, j: (o, j)),            # W
+            pl.BlockSpec((N, bo, bi), lambda o, j: (0, o, j)),      # V
+            pl.BlockSpec((N, 1, bi), lambda o, j: (0, 0, j)),       # p
+            pl.BlockSpec((N, 1, 1), lambda o, j: (0, 0, 0)),        # alpha
+        ],
+        out_specs=pl.BlockSpec((bo, bi), lambda o, j: (o, j)),
+        out_shape=jax.ShapeDtypeStruct((out_d, in_d), W.dtype),
+        interpret=interpret,
+    )(W, V, p3, a3)

@@ -1,23 +1,59 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Jit'd public wrappers + dispatch layer for the Pallas kernels.
 
-``interpret`` defaults to True because this container is CPU-only; the
-TPU launch path is the same call with ``interpret=False``.  Shapes that
-don't meet the kernels' block-multiple requirements fall back to the
-jnp oracle (recorded in the returned aux when ``debug=True``).
+Interpret mode: every wrapper takes ``interpret=None`` which resolves
+through the ``REPRO_PALLAS_INTERPRET`` env var (default "1": kernel
+bodies execute on CPU — this container has no TPU).  A TPU launch
+flips the one switch (``REPRO_PALLAS_INTERPRET=0``) instead of editing
+call sites.  The value is read at trace time, so set it before the
+first jitted call of the process.
+
+The ``maecho_*_auto`` wrappers are the backend used by
+``core.maecho``'s fused streaming pipeline: they normalise the
+projector kind (stacked scalar / diagonal / dense / factored
+``{"U", "s"}``), zero-pad non-block-multiple shapes via ``_pad_to``
+(zero padding is exact: padded residual tiles are identically zero),
+and fall back to the jnp oracles in ``ref.py`` for shapes too small to
+tile.  All of them assume the "oi" layout — ``core.maecho`` transposes
+"io" leaves before dispatch.
 """
 from __future__ import annotations
+
+import os
 
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.flash_attention import flash_attention
-from repro.kernels.maecho_update import maecho_update
-from repro.kernels.rank_update import block_rls_update, rank_downdate
+from repro.kernels import flash_attention as _fa
+from repro.kernels import maecho_gram as _mg
+from repro.kernels import maecho_update as _mu
+from repro.kernels import maecho_v_update as _mv
+from repro.kernels import rank_update as _ru
 
 __all__ = [
-    "flash_attention", "maecho_update", "rank_downdate",
-    "block_rls_update", "maecho_update_auto", "flash_attention_auto",
+    "flash_attention", "maecho_update", "maecho_update_factored",
+    "maecho_update_diag", "maecho_gram", "maecho_gram_factored",
+    "maecho_gram_diag", "maecho_v_update", "maecho_v_update_factored",
+    "maecho_v_update_diag", "rank_downdate", "block_rls_update",
+    "maecho_update_auto", "maecho_gram_auto", "maecho_v_update_auto",
+    "maecho_streaming_step", "flash_attention_auto",
+    "interpret_default", "DEFAULT_BLOCK",
 ]
+
+_INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
+
+# one tile edge: the auto wrappers fall back to the jnp oracles below
+# this, and core.maecho's backend="auto" keys off the same constant
+DEFAULT_BLOCK = 128
+
+
+def interpret_default() -> bool:
+    """True unless REPRO_PALLAS_INTERPRET is 0/false/no/off."""
+    val = os.environ.get(_INTERPRET_ENV, "1").strip().lower()
+    return val not in ("0", "false", "no", "off")
+
+
+def _resolve(interpret):
+    return interpret_default() if interpret is None else bool(interpret)
 
 
 def _pad_to(x, mult, axis):
@@ -29,26 +65,266 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, widths), pad
 
 
-def maecho_update_auto(W, V, P, alpha, *, eta: float = 1.0,
-                       block: int = 128, interpret: bool = True):
-    """Kernel when 128-alignable (after padding), oracle otherwise."""
-    out_d, in_d = W.shape
-    if out_d < block or in_d < block:
-        return ref.maecho_update_ref(W, V, P, alpha, eta)
+def _proj_kind(P) -> str:
+    """Kind of a *stacked* (leading client axis) projector leaf."""
+    if isinstance(P, dict):
+        return "factored"
+    if P.ndim == 1:
+        return "scalar"          # (N,) stacked scalar full projectors
+    if P.ndim == 2:
+        return "diag"            # (N, in)
+    return "full"                # (N, in, in)
+
+
+def _as_diag(P, in_d: int):
+    """Broadcast stacked scalars (N,) to a diagonal (N, in)."""
+    return jnp.broadcast_to(P[:, None], (P.shape[0], in_d))
+
+
+def _pad_wv(W, V, block):
     Wp, po = _pad_to(W, block, 0)
     Wp, pi = _pad_to(Wp, block, 1)
     if po or pi:
         Vp, _ = _pad_to(_pad_to(V, block, 1)[0], block, 2)
-        Pp, _ = _pad_to(_pad_to(P, block, 1)[0], block, 2)
     else:
-        Vp, Pp = V, P
-    out = maecho_update(Wp, Vp, Pp, alpha, eta=eta, bo=block, bi=block,
-                        bk=block, interpret=interpret)
+        Vp = V
+    return Wp, Vp, po, pi
+
+
+def _pad_factored(U, s, block):
+    """Pad the in-axis to ``block``; pad the rank only when it exceeds
+    one lane tile (bk = rank otherwise).  Zero-padded (U, s) columns
+    produce zero compressed-residual columns — exact."""
+    Up, _ = _pad_to(U, block, 1)
+    kd = U.shape[2]
+    if kd > block:
+        Up, _ = _pad_to(Up, block, 2)
+        sp, _ = _pad_to(s, block, 1)
+    else:
+        sp = s
+    return Up, sp
+
+
+# --------------------------------------------------------------------------
+# thin kernel wrappers (env-var interpret resolution)
+# --------------------------------------------------------------------------
+def maecho_update(W, V, P, alpha, *, eta: float = 1.0, bo: int = 128,
+                  bi: int = 128, bk: int = 128, interpret=None):
+    return _mu.maecho_update(W, V, P, alpha, eta=eta, bo=bo, bi=bi,
+                             bk=bk, interpret=_resolve(interpret))
+
+
+def maecho_update_factored(W, V, U, s, alpha, *, eta: float = 1.0,
+                           bo: int = 128, bi: int = 128, bk: int = 128,
+                           interpret=None):
+    return _mu.maecho_update_factored(W, V, U, s, alpha, eta=eta, bo=bo,
+                                      bi=bi, bk=bk,
+                                      interpret=_resolve(interpret))
+
+
+def maecho_update_diag(W, V, p, alpha, *, eta: float = 1.0,
+                       bo: int = 128, bi: int = 128, interpret=None):
+    return _mu.maecho_update_diag(W, V, p, alpha, eta=eta, bo=bo, bi=bi,
+                                  interpret=_resolve(interpret))
+
+
+def maecho_gram(W, V, P, *, bo: int = 128, bi: int = 128, bk: int = 128,
+                interpret=None):
+    return _mg.maecho_gram(W, V, P, bo=bo, bi=bi, bk=bk,
+                           interpret=_resolve(interpret))
+
+
+def maecho_gram_factored(W, V, U, s, *, bo: int = 128, bi: int = 128,
+                         bk: int = 128, interpret=None):
+    return _mg.maecho_gram_factored(W, V, U, s, bo=bo, bi=bi, bk=bk,
+                                    interpret=_resolve(interpret))
+
+
+def maecho_gram_diag(W, V, p, *, bo: int = 128, bi: int = 128,
+                     interpret=None):
+    return _mg.maecho_gram_diag(W, V, p, bo=bo, bi=bi,
+                                interpret=_resolve(interpret))
+
+
+def maecho_v_update(W, V, P, *, frac: float, norm: bool = False,
+                    eps: float = 1e-12, bo: int = 128, bi: int = 128,
+                    bk: int = 128, interpret=None):
+    return _mv.maecho_v_update(W, V, P, frac=frac, norm=norm, eps=eps,
+                               bo=bo, bi=bi, bk=bk,
+                               interpret=_resolve(interpret))
+
+
+def maecho_v_update_factored(W, V, U, s, *, frac: float,
+                             norm: bool = False, eps: float = 1e-12,
+                             bo: int = 128, bi: int = 128, bk: int = 128,
+                             interpret=None):
+    return _mv.maecho_v_update_factored(W, V, U, s, frac=frac, norm=norm,
+                                        eps=eps, bo=bo, bi=bi, bk=bk,
+                                        interpret=_resolve(interpret))
+
+
+def maecho_v_update_diag(W, V, p, *, frac: float, norm: bool = False,
+                         eps: float = 1e-12, bo: int = 128,
+                         bi: int = 128, interpret=None):
+    return _mv.maecho_v_update_diag(W, V, p, frac=frac, norm=norm,
+                                    eps=eps, bo=bo, bi=bi,
+                                    interpret=_resolve(interpret))
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 256,
+                    bk: int = 256, interpret=None):
+    return _fa.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                               interpret=_resolve(interpret))
+
+
+def rank_downdate(Q, U, A, *, bo: int = 256, bj: int = 256,
+                  interpret=None):
+    return _ru.rank_downdate(Q, U, A, bo=bo, bj=bj,
+                             interpret=_resolve(interpret))
+
+
+def block_rls_update(Q, Xb, alpha: float = 1.0, *, bo: int = 256,
+                     interpret=None):
+    return _ru.block_rls_update(Q, Xb, alpha, bo=bo,
+                                interpret=_resolve(interpret))
+
+
+# --------------------------------------------------------------------------
+# auto dispatch: kind normalisation + padding + small-shape fallback
+# --------------------------------------------------------------------------
+def _normalize_padded(W, V, P, block: int):
+    """Shared front half of the auto wrappers: classify the projector
+    and zero-pad every operand to block multiples.
+
+    Returns ``(kind, Wp, Vp, Pk)`` where ``Pk`` is the padded kernel
+    operand for the kind — an ``(U, s)`` tuple for "factored", a
+    (N, in_p) diagonal for "scalar"/"diag" (scalars broadcast), or the
+    (N, in_p, in_p) dense matrix for "full".
+    """
+    in_d = W.shape[1]
+    kind = _proj_kind(P)
+    Wp, Vp, po, pi = _pad_wv(W, V, block)
+    if kind == "factored":
+        Pk = _pad_factored(P["U"], P["s"], block)
+    elif kind in ("scalar", "diag"):
+        p = _as_diag(P, in_d) if kind == "scalar" else P
+        Pk = _pad_to(p, block, 1)[0]
+    else:
+        Pk = (_pad_to(_pad_to(P, block, 1)[0], block, 2)[0]
+              if (po or pi) else P)
+    return kind, Wp, Vp, Pk
+
+
+def maecho_update_auto(W, V, P, alpha, *, eta: float = 1.0,
+                       block: int = 128, interpret=None):
+    """Eq. 7 for any projector kind: kernel when tileable, oracle else."""
+    out_d, in_d = W.shape
+    if out_d < block or in_d < block:
+        return ref.maecho_update_ref_any(W, V, P, alpha, eta)
+    kind, Wp, Vp, Pk = _normalize_padded(W, V, P, block)
+    if kind == "factored":
+        out = maecho_update_factored(Wp, Vp, *Pk, alpha, eta=eta,
+                                     interpret=interpret)
+    elif kind == "full":
+        out = maecho_update(Wp, Vp, Pk, alpha, eta=eta,
+                            interpret=interpret)
+    else:
+        out = maecho_update_diag(Wp, Vp, Pk, alpha, eta=eta,
+                                 interpret=interpret)
     return out[:out_d, :in_d]
 
 
+def maecho_gram_auto(W, V, P, *, block: int = 128, interpret=None):
+    """(N, N) projected-residual Gram for any projector kind."""
+    out_d, in_d = W.shape
+    if out_d < block or in_d < block:
+        return ref.maecho_gram_ref(W, V, P)
+    kind, Wp, Vp, Pk = _normalize_padded(W, V, P, block)
+    if kind == "factored":
+        return maecho_gram_factored(Wp, Vp, *Pk, interpret=interpret)
+    if kind == "full":
+        return maecho_gram(Wp, Vp, Pk, interpret=interpret)
+    return maecho_gram_diag(Wp, Vp, Pk, interpret=interpret)
+
+
+def maecho_v_update_auto(W, V, P, *, frac: float, norm: bool = False,
+                         eps: float = 1e-12, block: int = 128,
+                         interpret=None):
+    """Eq. 11 for any projector kind.
+
+    With ``norm=True`` the kernels need full rows resident (bi = padded
+    in_d) — fine up to rows of ~16k fp32.
+    """
+    out_d, in_d = W.shape
+    if out_d < block or in_d < block:
+        return ref.maecho_v_update_ref(W, V, P, frac, norm, eps)
+    kind, Wp, Vp, Pk = _normalize_padded(W, V, P, block)
+    bi = Wp.shape[1] if norm else block
+    if kind == "factored":
+        out = maecho_v_update_factored(Wp, Vp, *Pk, frac=frac,
+                                       norm=norm, eps=eps, bi=bi,
+                                       interpret=interpret)
+    elif kind == "full":
+        out = maecho_v_update(Wp, Vp, Pk, frac=frac, norm=norm, eps=eps,
+                              bi=bi, interpret=interpret)
+    else:
+        out = maecho_v_update_diag(Wp, Vp, Pk, frac=frac, norm=norm,
+                                   eps=eps, bi=bi, interpret=interpret)
+    return out[:, :out_d, :in_d]
+
+
+def maecho_streaming_step(W, V, P, qp, *, eta: float = 1.0,
+                          frac: float = 0.5, norm: bool = False,
+                          eps: float = 1e-12, block: int = DEFAULT_BLOCK,
+                          interpret=None):
+    """One fused Algorithm-1 leaf iteration: gram → QP → Eq. 7 → Eq. 11.
+
+    ``qp`` maps the (N, N) Gram matrix to the simplex weights α.  The
+    projector is normalised and padded **once**, the whole pipeline
+    runs in padded space (zero padding is invariant under all three
+    passes), and the factored path shares one compressed residual
+    A between the gram and Eq. 7 kernels — the dominant O(N·out·in·k)
+    einsum is not recomputed.  Layout is "oi"; shapes below one tile
+    run the jnp oracles with the same QP.
+    """
+    out_d, in_d = W.shape
+    if out_d < block or in_d < block:
+        alpha = qp(ref.maecho_gram_ref(W, V, P))
+        W_new = ref.maecho_update_ref_any(W, V, P, alpha, eta)
+        return W_new, ref.maecho_v_update_ref(W_new, V, P, frac, norm,
+                                              eps)
+    kind, Wp, Vp, Pk = _normalize_padded(W, V, P, block)
+    bi = Wp.shape[1] if norm else block
+    if kind == "factored":
+        from repro.kernels.maecho_gram import compressed_residual
+
+        Up, sp = Pk
+        A = compressed_residual(Wp, Vp, Up, sp)
+        UT = jnp.swapaxes(Up, 1, 2).astype(jnp.float32)
+        alpha = qp(_mg.maecho_gram_left(A, UT,
+                                        interpret=_resolve(interpret)))
+        Wn = _mu.maecho_update_left(Wp, A, UT, alpha, eta=eta,
+                                    interpret=_resolve(interpret))
+        Vn = maecho_v_update_factored(Wn, Vp, Up, sp, frac=frac,
+                                      norm=norm, eps=eps, bi=bi,
+                                      interpret=interpret)
+    elif kind == "full":
+        alpha = qp(maecho_gram(Wp, Vp, Pk, interpret=interpret))
+        Wn = maecho_update(Wp, Vp, Pk, alpha, eta=eta,
+                           interpret=interpret)
+        Vn = maecho_v_update(Wn, Vp, Pk, frac=frac, norm=norm, eps=eps,
+                             bi=bi, interpret=interpret)
+    else:
+        alpha = qp(maecho_gram_diag(Wp, Vp, Pk, interpret=interpret))
+        Wn = maecho_update_diag(Wp, Vp, Pk, alpha, eta=eta,
+                                interpret=interpret)
+        Vn = maecho_v_update_diag(Wn, Vp, Pk, frac=frac, norm=norm,
+                                  eps=eps, bi=bi, interpret=interpret)
+    return Wn[:out_d, :in_d], Vn[:, :out_d, :in_d]
+
+
 def flash_attention_auto(q, k, v, *, causal: bool = True, bq: int = 256,
-                         bk: int = 256, interpret: bool = True):
+                         bk: int = 256, interpret=None):
     if q.shape[1] % min(bq, q.shape[1]) or k.shape[1] % min(bk, k.shape[1]):
         return ref.flash_attention_ref(q, k, v, causal=causal)
     return flash_attention(q, k, v, causal=causal,

@@ -1,10 +1,25 @@
-"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+"""Pure-jnp oracles for every Pallas kernel (allclose targets).
+
+The ``*_any`` MA-Echo oracles accept every projector kind the core
+algebra understands — stacked scalars (N,), diagonals (N, in), dense
+(N, in, in) and factored ``{"U": (N, in, k), "s": (N, k)}`` — by
+routing through ``core.maecho._apply_P`` (imported lazily: ``core``
+imports this package for backend dispatch).
+"""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.projections import block_update as _block_update
 from repro.models.layers import chunked_attention as _chunked_attention
+
+
+def _residuals(W, V, P, convention: str = "oi"):
+    """Rᵢ = (W − Vᵢ)Pᵢ for any projector kind (materialized: oracle)."""
+    from repro.core.maecho import _apply_P
+
+    return jax.vmap(lambda v, p: _apply_P(W - v, p, convention))(V, P)
 
 
 def maecho_update_ref(W, V, P, alpha, eta: float = 1.0):
@@ -12,6 +27,39 @@ def maecho_update_ref(W, V, P, alpha, eta: float = 1.0):
     R = jnp.einsum("noi,nij->noj", W[None] - V, P)
     D = -2.0 * jnp.einsum("n,noi->oi", alpha, R)
     return W + eta * D
+
+
+def maecho_update_ref_any(W, V, P, alpha, eta: float = 1.0,
+                          convention: str = "oi"):
+    """Eq. 7 for any projector kind, fp32 accumulation like the kernel."""
+    R = _residuals(W, V, P, convention).astype(jnp.float32)
+    D = -2.0 * jnp.einsum("n,n...->...", alpha.astype(jnp.float32), R)
+    return (W.astype(jnp.float32) + eta * D).astype(W.dtype)
+
+
+def maecho_gram_ref(W, V, P, convention: str = "oi"):
+    """G[i, j] = ⟨Rᵢ, Rⱼ⟩ with Rᵢ = (W − Vᵢ)Pᵢ — any projector kind."""
+    R = _residuals(W, V, P, convention)
+    Rf = R.reshape(R.shape[0], -1).astype(jnp.float32)
+    return Rf @ Rf.T
+
+
+def maecho_v_update_ref(W, V, P, frac: float, norm: bool = False,
+                        eps: float = 1e-12, convention: str = "oi"):
+    """Eq. 11: Vᵢ' = Vᵢ + Norm(Δᵢ − frac·Δᵢ Pᵢ) — any projector kind."""
+    from repro.core.maecho import _apply_P
+
+    def one(v, p):
+        delta = W - v
+        U = delta - frac * _apply_P(delta, p, convention)
+        if norm:
+            ax = -1 if convention == "oi" else 0
+            nrm = jnp.linalg.norm(U.astype(jnp.float32), axis=ax,
+                                  keepdims=True)
+            U = U / jnp.maximum(nrm, eps).astype(U.dtype)
+        return v + U
+
+    return jax.vmap(one)(V, P)
 
 
 def rank_downdate_ref(Q, U, A):

@@ -1,0 +1,108 @@
+"""Deterministic stand-in for the optional `hypothesis` dev dependency.
+
+`hypothesis` is not baked into the runtime container.  Rather than
+skipping the five property-test modules wholesale (they carry most of
+the core-algorithm coverage), ``conftest.py`` installs this stub into
+``sys.modules`` when the real library is missing: each ``@given`` test
+then runs a small fixed number of seeded examples drawn from the same
+strategy ranges.  ``pip install hypothesis`` upgrades the suite back to
+real adaptive property search with shrinking — nothing else changes.
+
+Only the API surface this repo's tests use is provided: ``given``,
+``settings`` and the ``strategies`` constructors ``integers``,
+``floats``, ``sampled_from``, ``booleans`` and ``lists``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+# cap per-test examples so the stubbed suite stays fast; the real
+# library honours the full max_examples the tests request
+_DEFAULT_EXAMPLES = 5
+_MAX_EXAMPLES_CAP = 8
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def _floats(min_value, max_value, **_kw):
+    lo, hi = float(min_value), float(max_value)
+    return _Strategy(lambda r: lo + (hi - lo) * r.random())
+
+
+def _sampled_from(elements):
+    elems = list(elements)
+    return _Strategy(lambda r: elems[r.randrange(len(elems))])
+
+
+def _booleans():
+    return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+
+def _lists(elem, min_size=0, max_size=10, **_kw):
+    def draw(r):
+        return [elem.draw(r) for _ in range(r.randint(min_size, max_size))]
+    return _Strategy(draw)
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.floats = _floats
+strategies.sampled_from = _sampled_from
+strategies.booleans = _booleans
+strategies.lists = _lists
+
+
+def settings(max_examples=None, deadline=None, **_kw):
+    def deco(fn):
+        if max_examples is not None:
+            fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        # every parameter must be strategy-supplied: the stub erases
+        # the signature, so a fixture/parametrize arg the real library
+        # would resolve would here silently receive a strategy value
+        n_params = len(inspect.signature(fn).parameters)
+        n_supplied = len(arg_strategies) + len(kw_strategies)
+        if n_params != n_supplied:
+            raise TypeError(
+                f"hypothesis stub: {fn.__name__} has {n_params} "
+                f"parameters but @given supplies {n_supplied} "
+                "strategies; mixing fixtures with @given needs the "
+                "real hypothesis (pip install hypothesis)")
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kw):
+            n = getattr(wrapper, "_stub_max_examples", None)
+            if n is None:
+                n = getattr(fn, "_stub_max_examples", _DEFAULT_EXAMPLES)
+            for ex in range(min(n, _MAX_EXAMPLES_CAP)):
+                # fresh seeded stream per example: deterministic across
+                # runs, varied across examples
+                r = random.Random(0xA11CE + 7919 * ex)
+                vals = [s.draw(r) for s in arg_strategies]
+                kwvals = {k: s.draw(r) for k, s in kw_strategies.items()}
+                fn(*args, *vals, **kw, **kwvals)
+        wrapper.is_hypothesis_stub = True
+        # strategy-provided params are not pytest fixtures: hide the
+        # wrapped signature from collection (as real hypothesis does)
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco

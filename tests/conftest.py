@@ -1,5 +1,37 @@
+"""Shared fixtures, optional-dependency shims and marker registration.
+
+`hypothesis` is an **optional dev dependency** (it is not in the
+runtime container image).  When it is missing, the deterministic stub
+in ``tests/_hypothesis_stub.py`` is installed into ``sys.modules``
+before collection so the property-test modules still collect and run
+on a small fixed sample per strategy.  ``pip install hypothesis``
+restores full property search.
+
+Markers:
+  slow — heaviest smoke/sweep tests.  ``pytest -m "not slow"`` is the
+  fast inner loop; tier-1 (plain ``pytest``) still runs everything.
+"""
+import pathlib
+import sys
+
 import numpy as np
 import pytest
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: heavy model-zoo smoke / sweep tests; deselect with "
+        "-m \"not slow\" for a fast inner loop (tier-1 runs all)")
 
 
 @pytest.fixture(scope="session")

@@ -53,6 +53,7 @@ def test_partition_extreme_noniid():
     assert concentrated >= 7
 
 
+@pytest.mark.slow
 def test_maecho_beats_fedavg(trained_clients):
     spec, data, parts, clients, projs = trained_clients
     acc = {}
@@ -66,6 +67,7 @@ def test_maecho_beats_fedavg(trained_clients):
     assert acc["maecho"] > acc["fedavg"] + 0.1, acc
 
 
+@pytest.mark.slow
 def test_maecho_retains_both_clients(trained_clients):
     spec, data, parts, clients, projs = trained_clients
     g = one_shot_aggregate(spec, clients, projs, "maecho",
@@ -76,6 +78,7 @@ def test_maecho_retains_both_clients(trained_clients):
         assert acc > 0.5, "global model forgot a client"
 
 
+@pytest.mark.slow
 def test_ot_matching_runs(trained_clients):
     spec, data, parts, clients, projs = trained_clients
     g = one_shot_aggregate(spec, clients, projs, "ot")
@@ -83,6 +86,7 @@ def test_ot_matching_runs(trained_clients):
     assert 0.0 <= acc <= 1.0
 
 
+@pytest.mark.slow
 def test_maecho_ot_combination(trained_clients):
     spec, data, parts, clients, projs = trained_clients
     g = one_shot_aggregate(spec, clients, projs, "maecho+ot",
@@ -93,6 +97,7 @@ def test_maecho_ot_combination(trained_clients):
     assert acc > acc2 - 0.05    # combo at least as good as OT alone
 
 
+@pytest.mark.slow
 def test_cnn_aggregation_runs():
     """Conv reshape path (paper §5.2) through the full pipeline."""
     spec = dataclasses.replace(pm.CNN_SPEC, in_shape=(8, 8, 3),
@@ -118,6 +123,7 @@ def test_cnn_aggregation_runs():
     assert g[0]["W"].shape == clients[0][0]["W"].shape  # conv restored
 
 
+@pytest.mark.slow
 def test_multi_round_improves():
     from repro.fl.rounds import MultiRoundConfig, run_multi_round
     data = generate(DATA)

@@ -27,6 +27,7 @@ def _batch(m, cfg, seed=0):
             for k, v in specs.items()}
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_projection_shapes_match_rules(arch):
     cfg = get_smoke_config(arch)
@@ -56,6 +57,7 @@ def test_projection_shapes_match_rules(arch):
             assert P.shape == W.shape[:levels]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["llama3_8b", "qwen2_moe_a2_7b"])
 def test_aggregation_preserves_shapes_and_finite(arch):
     cfg = get_smoke_config(arch)
@@ -70,6 +72,7 @@ def test_aggregation_preserves_shapes_and_finite(arch):
         assert np.all(np.isfinite(np.asarray(gl, np.float32))), pw
 
 
+@pytest.mark.slow
 def test_moe_expert_projectors_differ_by_expert():
     """Per-expert P built from routed streams must not be identical
     across experts (disjoint token subsets -> distinct row spaces)."""

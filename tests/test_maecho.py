@@ -191,6 +191,7 @@ def test_factored_projectors_match_full():
     assert tree["W"]["U"].shape == (8, 4)
 
 
+@pytest.mark.slow
 @given(st.integers(2, 5), st.floats(0.1, 1.0), st.integers(0, 20))
 @settings(max_examples=10, deadline=None)
 def test_always_finite(n_clients, eta, seed):

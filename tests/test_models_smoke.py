@@ -61,6 +61,7 @@ def test_smoke_reduction_limits(arch):
         assert cfg.moe.n_experts <= 4
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_forward_and_train_step(arch):
     cfg = get_smoke_config(arch)
@@ -78,6 +79,7 @@ def test_forward_and_train_step(arch):
     assert float(l1) < float(l0)          # one step on same batch helps
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_decode_steps_finite(arch):
     cfg = get_smoke_config(arch)
@@ -94,6 +96,7 @@ def test_decode_steps_finite(arch):
 
 @pytest.mark.parametrize("arch", ["llama3_8b", "qwen2_0_5b",
                                   "falcon_mamba_7b", "qwen2_moe_a2_7b"])
+@pytest.mark.slow
 def test_prefill_then_decode_matches_forward(arch):
     """prefill(prompt) + decode(next) must agree with a full forward
     over prompt+next — the KV-cache/state plumbing correctness test."""

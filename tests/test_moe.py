@@ -22,6 +22,7 @@ def _setup(seed=0, **moe_kw):
     return cfg, lp
 
 
+@pytest.mark.slow
 @given(st.integers(1, 3), st.integers(8, 96), st.integers(0, 30))
 @settings(max_examples=12, deadline=None)
 def test_gather_matches_einsum(B, S, seed):

@@ -8,6 +8,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import projections as proj
 
 
+@pytest.mark.slow
 @given(st.integers(4, 48), st.integers(2, 60), st.integers(0, 100))
 @settings(max_examples=25, deadline=None)
 def test_block_matches_direct(d, n, seed):

@@ -27,6 +27,7 @@ class FakeMesh:
         self.shape = shape
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", assigned_archs())
 def test_param_specs_divisible(arch):
     """Every sharded dim divides by its mesh axis (the rules' promise)."""
@@ -49,6 +50,7 @@ def test_param_specs_divisible(arch):
     trees.map_with_path(check, pspecs)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", assigned_archs())
 def test_big_tensors_are_sharded(arch):
     """No parameter tensor above 64 MB may be fully replicated."""
@@ -70,6 +72,7 @@ def test_big_tensors_are_sharded(arch):
 @pytest.mark.parametrize("arch", ["qwen2_0_5b", "falcon_mamba_7b",
                                   "qwen2_moe_a2_7b", "zamba2_2_7b",
                                   "whisper_tiny"])
+@pytest.mark.slow
 def test_sharded_train_step_lowers_on_debug_mesh(arch):
     """jit with in_shardings on the real 1-device mesh compiles and
     runs for the reduced configs."""

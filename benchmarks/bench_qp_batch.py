@@ -1,0 +1,125 @@
+"""Serial vs batched multi-leaf QP solve (ISSUE 2 tentpole).
+
+The MA-Echo outer iteration solves one N×N projected-gradient QP per
+leaf.  This suite times the two strategies head-to-head at growing
+leaf counts L:
+
+  - serial:  a Python loop of L jitted ``solve_qp`` calls — the old
+    τ-loop shape, one dispatch + one fori_loop per leaf;
+  - batched: one jitted ``solve_qp_batched`` call — a single vmapped
+    PGD solve over the whole (L, N, N) stack.
+
+A second pair of rows times full ``maecho_aggregate`` runs on a
+multi-leaf model with ``qp_batched`` off/on, so the trajectory also
+tracks the end-to-end effect on the aggregation hot path.  Rows land
+in ``BENCH_qp_batch.json`` via ``benchmarks.run`` and are gated by
+``tools/check_bench_regression.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core.maecho import MAEchoConfig, maecho_aggregate
+from repro.core.qp import solve_qp, solve_qp_batched
+
+_QP_ITERS = 300
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def _batched(G, C, iters):
+    return solve_qp_batched(G, C, iters)
+
+
+def _gram_stack(L: int, N: int, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    A = rng.randn(L, N, 2 * N).astype(np.float32)
+    return jnp.asarray(A @ A.transpose(0, 2, 1))
+
+
+def _time_serial(G, C):
+    def run():
+        return [solve_qp(G[i], C, iters=_QP_ITERS)
+                for i in range(G.shape[0])]
+    run()                                   # compile
+    outs, us = timed(run)
+    for _ in range(2):                      # best-of-3: shed noise
+        _, u = timed(run)
+        us = min(us, u)
+    return jnp.stack(outs), us
+
+
+def _time_batched(G, C):
+    fn = lambda: _batched(G, C, _QP_ITERS)  # noqa: E731
+    fn()                                    # compile
+    out, us = timed(fn)
+    for _ in range(2):
+        _, u = timed(fn)
+        us = min(us, u)
+    return out, us
+
+
+def _multileaf_model(n_layers: int, n_clients: int, d: int = 48):
+    """An n_layers-deep MLP pytree per client with dense projectors —
+    n_layers QPs per outer iteration."""
+    clients, projs = [], []
+    for i in range(n_clients):
+        k = jax.random.PRNGKey(7 * i + 1)
+        w, p = {}, {}
+        for l in range(n_layers):
+            kl = jax.random.fold_in(k, l)
+            w[f"l{l}"] = jax.random.normal(kl, (d, d)) * 0.3
+            X = jax.random.normal(jax.random.fold_in(kl, 1), (8, d))
+            Xn = X / jnp.maximum(jnp.linalg.norm(X, axis=1,
+                                                 keepdims=True), 1e-6)
+            p[f"l{l}"] = Xn.T @ Xn
+        clients.append(w)
+        projs.append(p)
+    return clients, projs
+
+
+def run(quick: bool = False):
+    N, C = 8, 1.0
+    for L in ([2, 4, 8] if quick else [2, 4, 8, 16, 32]):
+        G = _gram_stack(L, N)
+        a_serial, us_serial = _time_serial(G, C)
+        a_batched, us_batched = _time_batched(G, C)
+        match = np.allclose(np.asarray(a_serial), np.asarray(a_batched),
+                            atol=1e-4)
+        row(f"qp_batch/serial_L{L}_N{N}", us_serial, "")
+        row(f"qp_batch/batched_L{L}_N{N}", us_batched,
+            f"speedup={us_serial / max(us_batched, 1):.2f}x;"
+            f"match={match}")
+
+    # end-to-end: the τ-loop with per-leaf PGD vs one stacked solve
+    n_layers = 4 if quick else 8
+    clients, projs = _multileaf_model(n_layers, n_clients=N)
+    cfg = MAEchoConfig(tau=10, eta=0.5, qp_iters=150)
+    seq = dataclasses.replace(cfg, qp_batched=False)
+
+    def agg(c):
+        fn = lambda: maecho_aggregate(clients, projs, c)  # noqa: E731
+        fn()
+        out, us = timed(fn)
+        for _ in range(2):
+            _, u = timed(fn)
+            us = min(us, u)
+        return out, us
+
+    w_seq, us_seq = agg(seq)
+    w_bat, us_bat = agg(cfg)
+    agree = np.allclose(np.asarray(w_seq["l0"]), np.asarray(w_bat["l0"]),
+                        atol=1e-3)
+    tag = f"{n_layers}leaves_N{N}"
+    row(f"qp_batch/agg_seq_qp_{tag}", us_seq, "")
+    row(f"qp_batch/agg_batched_qp_{tag}", us_bat,
+        f"speedup={us_seq / max(us_bat, 1):.2f}x;match={agree}")
+
+
+if __name__ == "__main__":
+    run()

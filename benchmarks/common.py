@@ -21,7 +21,7 @@ import jax
 import numpy as np
 
 from repro.data.partition import dirichlet_partition
-from repro.data.synthetic import DatasetSpec, generate
+from repro.data.synthetic import DatasetSpec
 from repro.fl import models as pm
 from repro.fl.client import (LocalTrainConfig, compute_projections,
                              evaluate_classifier, train_classifier)
@@ -117,7 +117,13 @@ def persist_rows(suite: str, rows: list[dict], quick: bool) -> str:
     runs.append({"timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
                  "quick": quick, "rows": rows})
     tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump({"suite": suite, "runs": runs}, f, indent=1)
-    os.replace(tmp, path)
+    try:
+        with open(tmp, "w") as f:
+            json.dump({"suite": suite, "runs": runs}, f, indent=1)
+        os.replace(tmp, path)
+    finally:
+        # a failed dump (unserialisable row, full disk) must not leave
+        # the half-written temp file behind
+        if os.path.exists(tmp):
+            os.remove(tmp)
     return path

@@ -2,7 +2,6 @@
 multi-round FL — convergence in fewer rounds than FedAvg/FedProx."""
 from __future__ import annotations
 
-import dataclasses
 
 from benchmarks.common import BENCH_DATA, MLP, row
 from repro.core.maecho import MAEchoConfig

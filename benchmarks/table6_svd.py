@@ -2,17 +2,14 @@
 communication size vs aggregation accuracy."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import BENCH_DATA, MLP, row, timed, train_locals
 from repro.core.maecho import MAEchoConfig
-from repro.core.projections import (compression_ratio, svd_compress,
-                                    svd_restore)
+from repro.core.projections import svd_compress, svd_restore
 from repro.data.synthetic import generate
 from repro.fl.client import evaluate_classifier
 from repro.fl.server import one_shot_aggregate
-from repro.utils import trees
 
 
 def _compress(projs, k_fracs):

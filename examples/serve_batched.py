@@ -6,8 +6,6 @@ the aggregate is served with the batched prefill+decode loop — the
 
   PYTHONPATH=src python examples/serve_batched.py
 """
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp

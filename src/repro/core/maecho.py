@@ -51,17 +51,37 @@ The QP and the padding logic (``repro.kernels.ops._pad_to``, zero
 padding is exact for all three passes) are shared between backends;
 ``REPRO_PALLAS_INTERPRET`` selects interpret-mode kernel execution
 (this container) vs real TPU lowering.
+
+Batched QP (``MAEchoConfig.qp_batched``, default on): each outer
+iteration runs in three phases — every leaf (and every scanned layer
+of a stacked leaf) first emits its (N, N) Gram into one stacked
+(L, N, N) tensor, a **single** vmapped PGD solve
+(``qp.solve_qp_batched``) produces all τ vectors at once, and the
+α rows are scattered back through the per-leaf Eq. 7 / Eq. 11 updates
+(reusing the residual / compressed-residual context computed in the
+gram phase).  ``qp_batched=False`` restores the sequential
+one-PGD-per-leaf loop — same math, L solves instead of one.
+
+Memory trade-off: the batched path keeps every leaf's reuse context
+(on the oracle backend, the (N, out, in) fp32 residual) live across
+the stacked solve, so peak residency grows from one leaf's residual
+to ~N× the whole model in fp32.  Fine for the paper-scale models
+this τ-loop targets; for LLM-scale trees where that doesn't fit, set
+``qp_batched=False`` (sequential frees each leaf's residual before
+the next gram) or use the factored/kernel paths whose contexts are
+the (N, out, k) compressed residuals.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.qp import project_capped_simplex
+from repro.core import qp as qp_mod
 from repro.utils import trees
 
 Pytree = Any
@@ -77,6 +97,7 @@ class MAEchoConfig:
     qp_iters: int = 200
     init: str = "average"         # average | first | random
     eps: float = 1e-12
+    qp_batched: bool = True       # one stacked PGD solve per outer iter
 
 
 # --------------------------------------------------------------------------
@@ -116,23 +137,12 @@ def _apply_P(delta, P, convention: str):
 
 
 def _qp_alpha(G, cfg: MAEchoConfig):
-    """Eq. 6 dual QP via accelerated PGD on the capped simplex (inlined
-    so the whole aggregation jits as one program)."""
-    N = G.shape[0]
-    L = jnp.maximum(jnp.max(jnp.sum(jnp.abs(G), axis=1)), 1e-12)
-    step = 1.0 / L
-    a = project_capped_simplex(jnp.full((N,), 1.0 / N, jnp.float32), cfg.C)
-
-    def qp_body(_, state):
-        a, y, t = state
-        a_new = project_capped_simplex(y - step * (G @ y), cfg.C)
-        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
-        y_new = a_new + ((t - 1.0) / t_new) * (a_new - a)
-        return a_new, y_new, t_new
-
-    alpha, _, _ = jax.lax.fori_loop(
-        0, cfg.qp_iters, qp_body, (a, a, jnp.float32(1.0)))
-    return alpha
+    """Eq. 6 dual QP for the sequential (per-leaf) path.  Delegates to
+    ``qp.solve_qp`` — the same ``_pgd_masked`` body the batched solver
+    vmaps, so batched/sequential parity is structural, not maintained
+    by hand.  (The jitted wrapper traces inline under the enclosing
+    jit; the whole aggregation still compiles as one program.)"""
+    return qp_mod.solve_qp(G, cfg.C, iters=cfg.qp_iters)
 
 
 def _kernel_eligible(W, P) -> bool:
@@ -145,14 +155,23 @@ def _kernel_eligible(W, P) -> bool:
     return P.ndim in (1, 2, 3)
 
 
-def _leaf_step_kernel(W, V, P, cfg: MAEchoConfig, convention: str):
-    """One Algorithm-1 iteration through the fused streaming pipeline:
-    gram → QP → Eq. 7 update → Eq. 11 anchor update, each a single
-    Pallas pass with residual tiles formed in VMEM (module docstring;
-    the padding/kind dispatch and the factored-path compressed-residual
-    sharing live in ``ops.maecho_streaming_step``).  Kernels are
-    "oi"-native; "io" leaves are transposed around the call (XLA fuses
-    the transposes into the kernels' operand loads)."""
+def _use_kernel(W, P, backend: str) -> bool:
+    """Does this leaf take the fused streaming pipeline?  Must agree
+    between the gram and apply halves — both recompute it from the
+    same static shapes."""
+    if backend == "oracle" or not _kernel_eligible(W, P):
+        return False
+    from repro.kernels.ops import DEFAULT_BLOCK
+    return backend == "kernel" or min(W.shape) >= DEFAULT_BLOCK
+
+
+def _leaf_gram_kernel(W, V, P, convention: str):
+    """Gram half of the fused streaming pipeline: the Eq. 6 Gram plus
+    the padded-operand reuse context (padding/kind dispatch and the
+    factored-path compressed-residual sharing live in
+    ``ops.maecho_streaming_gram``).  Kernels are "oi"-native; "io"
+    leaves are transposed around the call (XLA fuses the transposes
+    into the kernels' operand loads)."""
     from repro.kernels import ops
 
     if convention == "io":
@@ -162,33 +181,36 @@ def _leaf_step_kernel(W, V, P, cfg: MAEchoConfig, convention: str):
                                        and P.ndim == 3) else P
     else:
         Wk, Vk, Pk = W, V, P
+    return ops.maecho_streaming_gram(Wk, Vk, Pk)
 
-    W_new, V_new = ops.maecho_streaming_step(
-        Wk, Vk, Pk, lambda G: _qp_alpha(G, cfg), eta=cfg.eta,
-        frac=cfg.mu / (1.0 + cfg.mu), norm=cfg.norm, eps=cfg.eps)
+
+def _leaf_apply_kernel(alpha, ctx, cfg: MAEchoConfig, convention: str):
+    """Update half of the fused streaming pipeline: Eq. 7 + Eq. 11 on
+    the context from :func:`_leaf_gram_kernel`."""
+    from repro.kernels import ops
+
+    W_new, V_new = ops.maecho_streaming_apply(
+        alpha, ctx, eta=cfg.eta, frac=cfg.mu / (1.0 + cfg.mu),
+        norm=cfg.norm, eps=cfg.eps)
     if convention == "io":
         return W_new.T, jnp.swapaxes(V_new, 1, 2)
     return W_new, V_new
 
 
-def _leaf_step(W, V, P, cfg: MAEchoConfig, convention: str,
-               backend: str = "oracle"):
-    """One Algorithm-1 iteration for a single layer leaf.
-
-    W: (...,);  V: (N, ...);  P: (N, [in, in] | [in] | []).
-    Returns (W', V').
-    """
-    if backend != "oracle" and _kernel_eligible(W, P):
-        from repro.kernels.ops import DEFAULT_BLOCK
-        if backend == "kernel" or min(W.shape) >= DEFAULT_BLOCK:
-            return _leaf_step_kernel(W, V, P, cfg, convention)
+def _leaf_gram_oracle(W, V, P, convention: str):
+    """Reference gram half: materializes the residual once and returns
+    it as the reuse context for :func:`_leaf_apply_oracle` (the same
+    tensor the fused step shared between its Gram and Eq. 7)."""
     N = V.shape[0]
     R = jax.vmap(lambda v, p: _apply_P(W - v, p, convention))(V, P)  # (N, ...)
     Rf = R.reshape(N, -1).astype(jnp.float32)
-    G = Rf @ Rf.T                                                  # (N, N)
+    return Rf @ Rf.T, R                                            # (N, N)
 
-    alpha = _qp_alpha(G, cfg)
 
+def _leaf_apply_oracle(W, V, P, R, alpha, cfg: MAEchoConfig,
+                       convention: str):
+    """Reference update half: Eq. 7 from the cached residual, then the
+    Eq. 11 anchor update."""
     D = -2.0 * jnp.tensordot(alpha, R.astype(jnp.float32), axes=(0, 0))
     W_new = (W.astype(jnp.float32) + cfg.eta * D).astype(W.dtype)
 
@@ -209,6 +231,23 @@ def _leaf_step(W, V, P, cfg: MAEchoConfig, convention: str,
     return W_new, V_new
 
 
+def _leaf_step(W, V, P, cfg: MAEchoConfig, convention: str,
+               backend: str = "oracle"):
+    """One Algorithm-1 iteration for a single layer leaf (the
+    sequential-QP path: gram → own PGD solve → apply).
+
+    W: (...,);  V: (N, ...);  P: (N, [in, in] | [in] | []).
+    Returns (W', V').
+    """
+    if _use_kernel(W, P, backend):
+        G, ctx = _leaf_gram_kernel(W, V, P, convention)
+        return _leaf_apply_kernel(_qp_alpha(G, cfg), ctx, cfg,
+                                  convention)
+    G, R = _leaf_gram_oracle(W, V, P, convention)
+    return _leaf_apply_oracle(W, V, P, R, _qp_alpha(G, cfg), cfg,
+                              convention)
+
+
 def _dispatch_leaf(W, V, P, cfg: MAEchoConfig, convention: str,
                    levels: int = 0, backend: str = "oracle"):
     """``levels`` leading stacked-layer axes are vmapped away; the QP is
@@ -222,6 +261,48 @@ def _dispatch_leaf(W, V, P, cfg: MAEchoConfig, convention: str,
                                            levels - 1, "oracle"),
             in_axes=(0, 1, 1), out_axes=(0, 1))(W, V, P)
     return _leaf_step(W, V, P, cfg, convention, backend)
+
+
+# --------------------------------------------------------------------------
+# batched QP: gram/apply leaf dispatch around one stacked PGD solve
+# --------------------------------------------------------------------------
+def _leaf_gram(W, V, P, cfg: MAEchoConfig, convention: str,
+               levels: int = 0, backend: str = "oracle"):
+    """Gram phase of the batched outer iteration.
+
+    Returns ``(G, ctx)``: G carries any stacked-layer axes in front of
+    its trailing (N, N) — the caller flattens those into the QP batch
+    axis — and ``ctx`` is the per-leaf reuse payload for
+    :func:`_leaf_apply` (the oracle residual, or the kernel pipeline's
+    padded-operand context).  Stacked leaves vmap the oracle gram, so
+    a leaf with L scanned layers contributes L rows to the batch."""
+    if levels > 0:
+        return jax.vmap(
+            lambda w, v, p: _leaf_gram(w, v, p, cfg, convention,
+                                       levels - 1, "oracle"),
+            in_axes=(0, 1, 1), out_axes=0)(W, V, P)
+    if _use_kernel(W, P, backend):
+        return _leaf_gram_kernel(W, V, P, convention)
+    return _leaf_gram_oracle(W, V, P, convention)
+
+
+def _leaf_apply(W, V, P, ctx, alpha, cfg: MAEchoConfig,
+                convention: str, levels: int = 0,
+                backend: str = "oracle"):
+    """Apply phase of the batched outer iteration: scatter this leaf's
+    τ rows of the stacked solve back through Eq. 7 / Eq. 11.  ``alpha``
+    carries the leaf's stacked-layer axes in front of its trailing N,
+    mirroring the gram layout."""
+    if levels > 0:
+        return jax.vmap(
+            lambda w, v, p, r, a: _leaf_apply(w, v, p, r, a, cfg,
+                                              convention, levels - 1,
+                                              "oracle"),
+            in_axes=(0, 1, 1, 0, 0), out_axes=(0, 1))(W, V, P, ctx,
+                                                      alpha)
+    if _use_kernel(W, P, backend):
+        return _leaf_apply_kernel(alpha, ctx, cfg, convention)
+    return _leaf_apply_oracle(W, V, P, ctx, alpha, cfg, convention)
 
 
 # --------------------------------------------------------------------------
@@ -263,8 +344,35 @@ def _maecho_jit(W0, V0, P, cfg: MAEchoConfig, convention: str,
         flatW, treedef = jax.tree_util.tree_flatten(W)
         flatV = treedef.flatten_up_to(V)
         flatP = treedef.flatten_up_to(P)
-        out = [_dispatch_leaf(w, v, p, cfg, convention, lv, backend)
-               for w, v, p, lv in zip(flatW, flatV, flatP, levels)]
+        if cfg.qp_batched:
+            # Phase 1: every leaf's (and every scanned layer's) Eq. 6
+            # Gram, assembled into one (L, N, N) stack.  N — the
+            # client count — is shared by construction inside one
+            # aggregate call, so stack_grams degenerates to a pure
+            # concat here (its padding serves the ragged case).
+            grams, ctxs = [], []
+            for w, v, p, lv in zip(flatW, flatV, flatP, levels):
+                g, ctx = _leaf_gram(w, v, p, cfg, convention, lv,
+                                    backend)
+                grams.append(g)
+                ctxs.append(ctx)
+            Gstack, n_valid = qp_mod.stack_grams(grams)
+            # Phase 2: ONE vmapped PGD solve for the whole batch …
+            alphas = qp_mod.solve_qp_batched(Gstack, cfg.C,
+                                             cfg.qp_iters, n_valid)
+            # Phase 3: … scattered back through each leaf's Eq. 7/11.
+            out, ofs = [], 0
+            for w, v, p, lv, ctx, g in zip(flatW, flatV, flatP, levels,
+                                           ctxs, grams):
+                cnt = math.prod(g.shape[:-2])
+                a = alphas[ofs:ofs + cnt].reshape(
+                    g.shape[:-2] + alphas.shape[-1:])
+                ofs += cnt
+                out.append(_leaf_apply(w, v, p, ctx, a, cfg,
+                                       convention, lv, backend))
+        else:
+            out = [_dispatch_leaf(w, v, p, cfg, convention, lv, backend)
+                   for w, v, p, lv in zip(flatW, flatV, flatP, levels)]
         W = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
         V = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
         return W, V

@@ -20,20 +20,33 @@ import jax
 import jax.numpy as jnp
 
 
-def project_capped_simplex(x, C: float, iters: int = 60):
+def project_capped_simplex(x, C: float, iters: int = 60, mask=None):
     """Euclidean projection onto {α : Σα = 1, 0 ≤ α ≤ C}.
 
     Solves for τ with Σ clip(x − τ, 0, C) = 1 by bisection (monotone
     decreasing in τ); jittable, fixed iteration count.
+
+    ``mask`` (optional, boolean, same shape as ``x``) restricts the
+    simplex to the masked coordinates: unmasked entries are held at
+    exactly 0 and excluded from the Σ = 1 constraint.  Used by the
+    batched solver where QPs of different sizes are padded to a common
+    N.  At least one entry must be masked-in.
     """
     x = x.astype(jnp.float32)
-    lo = jnp.min(x) - C - 1.0
-    hi = jnp.max(x)
+    if mask is None:
+        lo = jnp.min(x) - C - 1.0
+        hi = jnp.max(x)
+    else:
+        lo = jnp.min(jnp.where(mask, x, jnp.inf)) - C - 1.0
+        hi = jnp.max(jnp.where(mask, x, -jnp.inf))
 
     def body(_, lohi):
         lo, hi = lohi
         mid = 0.5 * (lo + hi)
-        s = jnp.sum(jnp.clip(x - mid, 0.0, C))
+        clipped = jnp.clip(x - mid, 0.0, C)
+        if mask is not None:
+            clipped = jnp.where(mask, clipped, 0.0)
+        s = jnp.sum(clipped)
         # s > 1 -> tau too small -> raise lo
         lo = jnp.where(s > 1.0, mid, lo)
         hi = jnp.where(s > 1.0, hi, mid)
@@ -41,7 +54,8 @@ def project_capped_simplex(x, C: float, iters: int = 60):
 
     lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
     tau = 0.5 * (lo + hi)
-    return jnp.clip(x - tau, 0.0, C)
+    out = jnp.clip(x - tau, 0.0, C)
+    return out if mask is None else jnp.where(mask, out, 0.0)
 
 
 @partial(jax.jit, static_argnames=("iters",))
@@ -50,26 +64,84 @@ def solve_qp(G, C: float, iters: int = 300):
 
     G: (N, N) PSD Gram matrix (any positive rescaling of G gives the
     same minimiser, so callers may pass unscaled residual inner
-    products).  Returns α ∈ R^N.
+    products).  Returns α ∈ R^N.  The all-valid case of
+    :func:`_pgd_masked` — one iteration body to maintain.
     """
-    N = G.shape[0]
-    G = G.astype(jnp.float32)
-    # Lipschitz bound: row-sum norm (cheap, >= lambda_max for PSD G)
-    L = jnp.maximum(jnp.max(jnp.sum(jnp.abs(G), axis=1)), 1e-12)
+    return _pgd_masked(G, jnp.ones((G.shape[0],), bool), C, iters)
+
+
+def _pgd_masked(G, mask, C: float, iters: int):
+    """One masked accelerated-PGD solve (the body of :func:`solve_qp`
+    and the vmap body of :func:`solve_qp_batched`).
+
+    G: (Nmax, Nmax) with arbitrary values in padded rows/columns (they
+    are zeroed here); mask: (Nmax,) boolean validity.  Returns α with
+    exact zeros on padded coordinates.
+    """
+    pair = mask[:, None] & mask[None, :]
+    Gm = jnp.where(pair, G.astype(jnp.float32), 0.0)
+    # Lipschitz bound: masked row-sum norm (padded rows sum to 0)
+    L = jnp.maximum(jnp.max(jnp.sum(jnp.abs(Gm), axis=1)), 1e-12)
     step = 1.0 / L
-    a0 = jnp.full((N,), 1.0 / N, jnp.float32)
-    a0 = project_capped_simplex(a0, C)
+    n = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+    a0 = project_capped_simplex(
+        jnp.where(mask, 1.0 / n, 0.0), C, mask=mask)
 
     def body(_, state):
         a, y, t = state
-        g = G @ y
-        a_new = project_capped_simplex(y - step * g, C)
+        a_new = project_capped_simplex(y - step * (Gm @ y), C, mask=mask)
         t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
         y_new = a_new + ((t - 1.0) / t_new) * (a_new - a)
         return a_new, y_new, t_new
 
     a, _, _ = jax.lax.fori_loop(0, iters, body, (a0, a0, jnp.float32(1.0)))
     return a
+
+
+def solve_qp_batched(G, C: float, iters: int = 300, n_valid=None):
+    """One vmapped accelerated-PGD solve for a whole stack of QPs.
+
+    G: (L, Nmax, Nmax) stacked Gram matrices — one per leaf (and per
+    scanned layer) of a MA-Echo outer iteration, padded to the max N
+    across leaves.  ``n_valid`` is an (L,) int vector giving each QP's
+    true size (``None`` means all full: the common case inside
+    ``maecho_aggregate``, where every leaf sees the same client count).
+    Rows/columns at index ≥ n_valid[l] are padding; the corresponding
+    α entries come back as exact zeros.
+
+    Identical iteration rule to :func:`solve_qp` (same step size, same
+    projection bisection), so a full-size batch matches L sequential
+    solves to float32 round-off.  Returns (L, Nmax).
+    """
+    L, Nmax = G.shape[0], G.shape[-1]
+    if n_valid is None:
+        mask = jnp.ones((L, Nmax), bool)
+    else:
+        n_valid = jnp.asarray(n_valid, jnp.int32)
+        mask = jnp.arange(Nmax)[None, :] < n_valid[:, None]
+    return jax.vmap(_pgd_masked, in_axes=(0, 0, None, None))(
+        G, mask, C, iters)
+
+
+def stack_grams(grams):
+    """Pad a list of ragged (..., N_l, N_l) Gram stacks to a single
+    (ΣL_l, Nmax, Nmax) tensor plus its (ΣL_l,) validity vector.
+
+    Each entry may carry leading batch axes (stacked-layer leaves);
+    they are flattened into the QP axis.  This is the assembly step of
+    the batched outer iteration: all leaves' QPs ride one
+    :func:`solve_qp_batched` call.
+    """
+    flat = [g.reshape((-1,) + g.shape[-2:]) for g in grams]
+    n_max = max(g.shape[-1] for g in flat)
+    padded, valid = [], []
+    for g in flat:
+        n = g.shape[-1]
+        if n < n_max:
+            g = jnp.pad(g, ((0, 0), (0, n_max - n), (0, n_max - n)))
+        padded.append(g)
+        valid.extend([n] * g.shape[0])
+    return jnp.concatenate(padded, 0), jnp.asarray(valid, jnp.int32)
 
 
 def solve_qp_active_set(G, C: float, tol: float = 1e-10,

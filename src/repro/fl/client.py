@@ -8,7 +8,7 @@ machinery, for the LLM zoo (see ``repro.fl.llm_adapter``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +17,7 @@ import numpy as np
 from repro.core import projections as proj
 from repro.fl import models as pm
 from repro.models.layers import softmax_xent
-from repro.optim import Optimizer, sgd
+from repro.optim import sgd
 from repro.utils import trees
 
 

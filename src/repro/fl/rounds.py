@@ -6,6 +6,14 @@ global model, aggregate.  The aggregation operator is pluggable —
 ``fedavg``, ``fedprox`` (fedavg + proximal local loss), or ``maecho``
 (Algorithm 1 replaces the averaging operation, the paper's claim that
 it converges in fewer rounds).
+
+The maecho round hands the sampled clients' *whole leaf batch* to one
+aggregation call: with ``MAEchoConfig.qp_batched`` (default) every
+outer iteration stacks all layers' Gram matrices and issues a single
+vmapped PGD solve instead of one QP per layer — the round loop never
+serialises over leaves.  ``MultiRoundConfig.maecho_backend`` selects
+the per-leaf compute path (``"oracle"`` | ``"kernel"`` | ``"auto"``,
+see ``core.maecho``).
 """
 from __future__ import annotations
 
@@ -30,6 +38,10 @@ class MultiRoundConfig:
     method: str = "fedavg"        # fedavg | fedprox | maecho
     local: LocalTrainConfig = LocalTrainConfig(epochs=10)
     maecho: MAEchoConfig = MAEchoConfig(tau=20, eta=0.5)
+    # "auto" promotes big leaves to the fused Pallas pipeline on TPU;
+    # the default stays "oracle" because interpret-mode kernel
+    # execution (this container) is simulation, not a speedup.
+    maecho_backend: str = "oracle"  # oracle | kernel | auto
     proj_alpha: float = 1.0
     seed: int = 0
 
@@ -68,7 +80,8 @@ def run_multi_round(
         flat = list(flat)
         if cfg.method == "maecho":
             fprojs = [_flatten_proj(pr) for pr in projs]
-            new = maecho_aggregate(flat, fprojs, cfg.maecho)
+            new = maecho_aggregate(flat, fprojs, cfg.maecho,
+                                   backend=cfg.maecho_backend)
         else:
             from repro.core.aggregators import fedavg
             new = fedavg(flat)

@@ -7,12 +7,9 @@ from __future__ import annotations
 
 from typing import Optional
 
-import jax.numpy as jnp
-
 from repro.core import aggregators
 from repro.core.maecho import MAEchoConfig
 from repro.fl import models as pm
-from repro.utils import trees
 
 
 def _flatten_convs(params):

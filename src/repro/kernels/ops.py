@@ -35,7 +35,8 @@ __all__ = [
     "maecho_gram_diag", "maecho_v_update", "maecho_v_update_factored",
     "maecho_v_update_diag", "rank_downdate", "block_rls_update",
     "maecho_update_auto", "maecho_gram_auto", "maecho_v_update_auto",
-    "maecho_streaming_step", "flash_attention_auto",
+    "maecho_streaming_step", "maecho_streaming_gram",
+    "maecho_streaming_apply", "flash_attention_auto",
     "interpret_default", "DEFAULT_BLOCK",
 ]
 
@@ -273,6 +274,76 @@ def maecho_v_update_auto(W, V, P, *, frac: float, norm: bool = False,
     return out[:, :out_d, :in_d]
 
 
+def maecho_streaming_gram(W, V, P, *, block: int = DEFAULT_BLOCK,
+                          interpret=None):
+    """Gram half of the fused leaf iteration: returns ``(G, ctx)``.
+
+    G is the (N, N) Eq. 6 Gram matrix; ``ctx`` is an opaque reuse
+    context for :func:`maecho_streaming_apply` carrying the classified
+    kind, the padded operands, and — on the factored path — the
+    compressed residual A shared with the Eq. 7 kernel (the dominant
+    O(N·out·in·k) einsum is not recomputed).  Splitting gram from
+    apply is what lets ``core.maecho`` stack every leaf's Gram into
+    one (L, N, N) batch and run a single vmapped QP solve per outer
+    iteration instead of L sequential ones.
+    """
+    out_d, in_d = W.shape
+    if out_d < block or in_d < block:
+        return ref.maecho_gram_ref(W, V, P), ("ref", W, V, P,
+                                              out_d, in_d)
+    kind, Wp, Vp, Pk = _normalize_padded(W, V, P, block)
+    if kind == "factored":
+        from repro.kernels.maecho_gram import compressed_residual
+
+        Up, sp = Pk
+        A = compressed_residual(Wp, Vp, Up, sp)
+        UT = jnp.swapaxes(Up, 1, 2).astype(jnp.float32)
+        G = _mg.maecho_gram_left(A, UT, interpret=_resolve(interpret))
+        return G, (kind, Wp, Vp, (Up, sp, A, UT), out_d, in_d)
+    if kind == "full":
+        G = maecho_gram(Wp, Vp, Pk, interpret=interpret)
+    else:
+        G = maecho_gram_diag(Wp, Vp, Pk, interpret=interpret)
+    return G, (kind, Wp, Vp, Pk, out_d, in_d)
+
+
+def maecho_streaming_apply(alpha, ctx, *, eta: float = 1.0,
+                           frac: float = 0.5, norm: bool = False,
+                           eps: float = 1e-12, block: int = DEFAULT_BLOCK,
+                           interpret=None):
+    """Update half of the fused leaf iteration: Eq. 7 then Eq. 11.
+
+    ``ctx`` is the context returned by :func:`maecho_streaming_gram`
+    for the same leaf (same padded operands — the pipeline stays in
+    padded space; zero padding is invariant under all three passes).
+    Returns ``(W', V')`` cropped back to the original shape.
+    """
+    kind, Wp, Vp, Pk, out_d, in_d = ctx
+    if kind == "ref":
+        W_new = ref.maecho_update_ref_any(Wp, Vp, Pk, alpha, eta)
+        return W_new, ref.maecho_v_update_ref(W_new, Vp, Pk, frac,
+                                              norm, eps)
+    bi = Wp.shape[1] if norm else block
+    if kind == "factored":
+        Up, sp, A, UT = Pk
+        Wn = _mu.maecho_update_left(Wp, A, UT, alpha, eta=eta,
+                                    interpret=_resolve(interpret))
+        Vn = maecho_v_update_factored(Wn, Vp, Up, sp, frac=frac,
+                                      norm=norm, eps=eps, bi=bi,
+                                      interpret=interpret)
+    elif kind == "full":
+        Wn = maecho_update(Wp, Vp, Pk, alpha, eta=eta,
+                           interpret=interpret)
+        Vn = maecho_v_update(Wn, Vp, Pk, frac=frac, norm=norm, eps=eps,
+                             bi=bi, interpret=interpret)
+    else:
+        Wn = maecho_update_diag(Wp, Vp, Pk, alpha, eta=eta,
+                                interpret=interpret)
+        Vn = maecho_v_update_diag(Wn, Vp, Pk, frac=frac, norm=norm,
+                                  eps=eps, bi=bi, interpret=interpret)
+    return Wn[:out_d, :in_d], Vn[:, :out_d, :in_d]
+
+
 def maecho_streaming_step(W, V, P, qp, *, eta: float = 1.0,
                           frac: float = 0.5, norm: bool = False,
                           eps: float = 1e-12, block: int = DEFAULT_BLOCK,
@@ -280,47 +351,20 @@ def maecho_streaming_step(W, V, P, qp, *, eta: float = 1.0,
     """One fused Algorithm-1 leaf iteration: gram → QP → Eq. 7 → Eq. 11.
 
     ``qp`` maps the (N, N) Gram matrix to the simplex weights α.  The
-    projector is normalised and padded **once**, the whole pipeline
-    runs in padded space (zero padding is invariant under all three
-    passes), and the factored path shares one compressed residual
-    A between the gram and Eq. 7 kernels — the dominant O(N·out·in·k)
-    einsum is not recomputed.  Layout is "oi"; shapes below one tile
-    run the jnp oracles with the same QP.
+    projector is normalised and padded **once** (in the gram half) and
+    the whole pipeline runs in padded space.  This is the single-leaf
+    composition of :func:`maecho_streaming_gram` and
+    :func:`maecho_streaming_apply`; the batched path in
+    ``core.maecho`` calls the two halves directly around one stacked
+    QP solve.  Layout is "oi"; shapes below one tile run the jnp
+    oracles with the same QP.
     """
-    out_d, in_d = W.shape
-    if out_d < block or in_d < block:
-        alpha = qp(ref.maecho_gram_ref(W, V, P))
-        W_new = ref.maecho_update_ref_any(W, V, P, alpha, eta)
-        return W_new, ref.maecho_v_update_ref(W_new, V, P, frac, norm,
-                                              eps)
-    kind, Wp, Vp, Pk = _normalize_padded(W, V, P, block)
-    bi = Wp.shape[1] if norm else block
-    if kind == "factored":
-        from repro.kernels.maecho_gram import compressed_residual
-
-        Up, sp = Pk
-        A = compressed_residual(Wp, Vp, Up, sp)
-        UT = jnp.swapaxes(Up, 1, 2).astype(jnp.float32)
-        alpha = qp(_mg.maecho_gram_left(A, UT,
-                                        interpret=_resolve(interpret)))
-        Wn = _mu.maecho_update_left(Wp, A, UT, alpha, eta=eta,
-                                    interpret=_resolve(interpret))
-        Vn = maecho_v_update_factored(Wn, Vp, Up, sp, frac=frac,
-                                      norm=norm, eps=eps, bi=bi,
-                                      interpret=interpret)
-    elif kind == "full":
-        alpha = qp(maecho_gram(Wp, Vp, Pk, interpret=interpret))
-        Wn = maecho_update(Wp, Vp, Pk, alpha, eta=eta,
-                           interpret=interpret)
-        Vn = maecho_v_update(Wn, Vp, Pk, frac=frac, norm=norm, eps=eps,
-                             bi=bi, interpret=interpret)
-    else:
-        alpha = qp(maecho_gram_diag(Wp, Vp, Pk, interpret=interpret))
-        Wn = maecho_update_diag(Wp, Vp, Pk, alpha, eta=eta,
-                                interpret=interpret)
-        Vn = maecho_v_update_diag(Wn, Vp, Pk, frac=frac, norm=norm,
-                                  eps=eps, bi=bi, interpret=interpret)
-    return Wn[:out_d, :in_d], Vn[:, :out_d, :in_d]
+    G, ctx = maecho_streaming_gram(W, V, P, block=block,
+                                   interpret=interpret)
+    alpha = qp(G)
+    return maecho_streaming_apply(alpha, ctx, eta=eta, frac=frac,
+                                  norm=norm, eps=eps, block=block,
+                                  interpret=interpret)
 
 
 def flash_attention_auto(q, k, v, *, causal: bool = True, bq: int = 256,

@@ -226,7 +226,8 @@ def prefill(cfg: ModelConfig, params, batch):
 # --------------------------------------------------------------------------
 def init_cache(cfg: ModelConfig, batch: int, window: int):
     nL, hd, e = cfg.n_layers, cfg.hd(), cfg.encdec
-    kv = lambda s: jnp.zeros((nL, batch, s, cfg.n_kv_heads, hd), cfg.cdtype)
+    kv = lambda s: jnp.zeros(  # noqa: E731
+        (nL, batch, s, cfg.n_kv_heads, hd), cfg.cdtype)
     return {"k": kv(window), "v": kv(window),
             "xk": kv(e.enc_seq), "xv": kv(e.enc_seq)}
 

@@ -10,7 +10,6 @@ against :func:`chunked_attention` as its oracle.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,7 @@ roofline fit (DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -82,7 +82,7 @@ def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay: float = 0.0,
     sched = lr if callable(lr) else constant_schedule(lr)
 
     def init(params):
-        z = lambda: trees.tree_zeros_like(params, dtype=state_dtype)
+        z = lambda: trees.tree_zeros_like(params, dtype=state_dtype)  # noqa: E731
         return {"m": z(), "v": z()}
 
     def update(grads, state, params, step):

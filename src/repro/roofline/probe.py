@@ -25,7 +25,6 @@ from __future__ import annotations
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 
 from repro.models.config import InputShape, ModelConfig
 from repro.roofline.analysis import collective_bytes

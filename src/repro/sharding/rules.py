@@ -18,7 +18,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.config import InputShape, ModelConfig
+from repro.models.config import ModelConfig
 from repro.utils import trees
 
 

@@ -1,0 +1,192 @@
+"""Benchmark persistence + regression-gate tooling.
+
+Covers the atomic-write temp-file cleanup in ``benchmarks.common`` and
+``tools/check_bench_regression.py`` (pass, injected slowdown,
+--update-baseline round trip)."""
+import importlib.util
+import json
+import os
+import pathlib
+import sys
+
+import pytest
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+if str(_ROOT) not in sys.path:          # `benchmarks` is a root package
+    sys.path.insert(0, str(_ROOT))
+
+from benchmarks import common  # noqa: E402
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_bench_regression",
+        _ROOT / "tools" / "check_bench_regression.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# --------------------------------------------------------------------------
+# benchmarks.common.persist_rows
+# --------------------------------------------------------------------------
+def test_persist_rows_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_BENCH_DIR", str(tmp_path))
+    rows = [{"name": "s/a", "us_per_call": 120, "derived": ""}]
+    path = common.persist_rows("tsuite", rows, quick=True)
+    with open(path) as f:
+        data = json.load(f)
+    assert data["suite"] == "tsuite"
+    assert data["runs"][-1]["rows"] == rows
+    common.persist_rows("tsuite", rows, quick=False)
+    with open(path) as f:
+        assert len(json.load(f)["runs"]) == 2
+    assert not os.path.exists(path + ".tmp")
+
+
+def test_persist_rows_cleans_tmp_on_failure(tmp_path, monkeypatch):
+    """A failed dump (unserialisable row) must propagate AND leave no
+    half-written ``*.tmp`` file behind."""
+    monkeypatch.setenv("REPRO_BENCH_DIR", str(tmp_path))
+    good = [{"name": "s/a", "us_per_call": 100, "derived": ""}]
+    path = common.persist_rows("tsuite", good, quick=True)
+    with pytest.raises(TypeError):
+        common.persist_rows("tsuite", [{"name": "s/b",
+                                        "us_per_call": object()}],
+                            quick=True)
+    assert not os.path.exists(path + ".tmp")
+    with open(path) as f:                   # prior trajectory intact
+        assert len(json.load(f)["runs"]) == 1
+
+
+# --------------------------------------------------------------------------
+# tools/check_bench_regression.py
+# --------------------------------------------------------------------------
+def _write_bench(dirpath, suite, rows):
+    with open(os.path.join(dirpath, f"BENCH_{suite}.json"), "w") as f:
+        json.dump({"suite": suite,
+                   "runs": [{"timestamp": "t", "quick": False,
+                             "rows": rows}]}, f)
+
+
+def _row(name, us):
+    return {"name": name, "us_per_call": us, "derived": ""}
+
+
+def test_gate_passes_within_threshold(tmp_path):
+    chk = _load_checker()
+    _write_bench(tmp_path, "foo", [_row("foo/x", 1100)])
+    baseline = tmp_path / "baselines.json"
+    baseline.write_text(json.dumps({"foo": {"foo/x": 1000}}))
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(baseline)])
+    assert rc == 0                          # +10% < 15% threshold
+
+
+def test_gate_fails_on_injected_slowdown(tmp_path):
+    """A 20% slowdown against the baseline exits non-zero (acceptance
+    criterion)."""
+    chk = _load_checker()
+    _write_bench(tmp_path, "foo", [_row("foo/x", 1200),
+                                   _row("foo/y", 500)])
+    baseline = tmp_path / "baselines.json"
+    baseline.write_text(json.dumps({"foo": {"foo/x": 1000,
+                                            "foo/y": 500}}))
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(baseline)])
+    assert rc != 0
+
+
+def test_gate_skips_sub_minimum_rows(tmp_path):
+    """µs-scale rows (dispatch jitter) never trip the gate."""
+    chk = _load_checker()
+    _write_bench(tmp_path, "foo", [_row("foo/tiny", 80)])
+    baseline = tmp_path / "baselines.json"
+    baseline.write_text(json.dumps({"foo": {"foo/tiny": 40}}))
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(baseline)])
+    assert rc == 0                          # 2x but below --min-us
+
+
+def test_gate_catches_blowup_from_tiny_baseline(tmp_path):
+    """A tiny baseline row exploding past --min-us still fails — the
+    jitter skip needs BOTH sides small."""
+    chk = _load_checker()
+    _write_bench(tmp_path, "foo", [_row("foo/tiny", 40000)])
+    baseline = tmp_path / "baselines.json"
+    baseline.write_text(json.dumps({"foo": {"foo/tiny": 40}}))
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(baseline)])
+    assert rc == 1
+
+
+def test_gate_ignores_quick_runs(tmp_path):
+    """--quick runs shrink workloads without renaming rows, so they
+    are never gated (or baselined) unless --allow-quick."""
+    chk = _load_checker()
+    with open(os.path.join(tmp_path, "BENCH_foo.json"), "w") as f:
+        json.dump({"suite": "foo",
+                   "runs": [{"timestamp": "t0", "quick": False,
+                             "rows": [_row("foo/x", 1000)]},
+                            {"timestamp": "t1", "quick": True,
+                             "rows": [_row("foo/x", 9000)]}]}, f)
+    baseline = tmp_path / "baselines.json"
+    baseline.write_text(json.dumps({"foo": {"foo/x": 1000}}))
+    # latest run is quick (9x slower) but the gate reads the newest
+    # FULL run, which matches the baseline
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(baseline)])
+    assert rc == 0
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(baseline), "--allow-quick"])
+    assert rc == 1
+
+
+def test_gate_new_rows_not_gated(tmp_path):
+    chk = _load_checker()
+    _write_bench(tmp_path, "foo", [_row("foo/x", 1000),
+                                   _row("foo/new", 9999)])
+    baseline = tmp_path / "baselines.json"
+    baseline.write_text(json.dumps({"foo": {"foo/x": 1000}}))
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(baseline)])
+    assert rc == 0
+
+
+def test_update_baseline_roundtrip(tmp_path):
+    """--update-baseline rewrites the baseline so the same bench files
+    then gate clean — and a later slowdown against it fails."""
+    chk = _load_checker()
+    _write_bench(tmp_path, "foo", [_row("foo/x", 2000)])
+    baseline = tmp_path / "baselines.json"
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(baseline), "--update-baseline"])
+    assert rc == 0
+    assert json.loads(baseline.read_text()) == {"foo": {"foo/x": 2000}}
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(baseline)])
+    assert rc == 0
+    _write_bench(tmp_path, "foo", [_row("foo/x", 2400)])  # +20%
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(baseline)])
+    assert rc == 1
+
+
+def test_explicit_suite_missing_bench_file_fails(tmp_path):
+    """A suite NAMED on the command line with no bench run must fail —
+    a drifted CI step must not make the gate silently vacuous."""
+    chk = _load_checker()
+    baseline = tmp_path / "baselines.json"
+    baseline.write_text(json.dumps({"foo": {"foo/x": 1000}}))
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(baseline), "--suites", "foo"])
+    assert rc == 1
+
+
+def test_no_suites_discovered_is_not_a_failure(tmp_path):
+    """With no --suites and an empty bench dir there is nothing to
+    gate — not an error."""
+    chk = _load_checker()
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(tmp_path / "baselines.json")])
+    assert rc == 0

@@ -8,7 +8,6 @@ from hypothesis import given, settings, strategies as st
 from repro.core import projections as proj
 from repro.core.maecho import (MAEchoConfig, default_projections,
                                init_global, maecho_aggregate)
-from repro.utils import trees
 
 
 def _rand_client(seed, shape=(6, 4)):

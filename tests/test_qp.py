@@ -1,7 +1,6 @@
 """Eq. 6 dual QP: projection + solver properties (hypothesis)."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.qp import (project_capped_simplex, solve_qp,
@@ -43,7 +42,7 @@ def test_pgd_matches_reference(n, d, C, seed):
     G = A @ A.T
     a_pgd = np.array(solve_qp(jnp.asarray(G), float(C), iters=500))
     a_ref = solve_qp_active_set(G, float(C))
-    obj = lambda a: 0.5 * a @ G @ a
+    obj = lambda a: 0.5 * a @ G @ a  # noqa: E731
     assert obj(a_pgd) <= obj(a_ref) * 1.05 + 1e-6
     assert abs(a_pgd.sum() - 1) < 1e-4
     assert a_pgd.max() <= C + 1e-4

@@ -1,6 +1,5 @@
 """Roofline machinery: HLO collective parser, three-term math,
 probe extrapolation, analytic memory model."""
-import numpy as np
 import pytest
 
 from repro.configs import get_config

@@ -13,7 +13,6 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs import assigned_archs, get_config, get_smoke_config
 from repro.launch.mesh import make_debug_mesh
-from repro.models.config import INPUT_SHAPES
 from repro.models.zoo import get_model
 from repro.optim import sgd
 from repro.sharding.rules import make_rules

@@ -1,0 +1,175 @@
+"""Gate PRs on the BENCH_<suite>.json perf trajectories.
+
+Compares the most recent run of each suite's ``BENCH_<suite>.json``
+against the committed baseline (``benchmarks/baselines.json``) and
+exits non-zero when any row slowed down more than ``--threshold``
+percent (default 15) — the ROADMAP's "fail a PR when a row slows down
+>X%" item.  Rows faster than ``--min-us`` (default 100µs) are skipped:
+at that scale dispatch jitter swamps any real signal.
+
+Usage::
+
+    python tools/check_bench_regression.py                 # gate all suites
+    python tools/check_bench_regression.py --suites qp_batch,kernels
+    python tools/check_bench_regression.py --update-baseline
+
+``--update-baseline`` rewrites the baseline from the current bench
+files instead of gating (run it after landing an intentional perf
+change, commit the result).  New rows (present in the bench file,
+absent from the baseline) and retired rows are reported but never
+fail the gate — only a measured slowdown does.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), os.pardir,
+                                "benchmarks", "baselines.json")
+
+
+def load_latest_rows(bench_path: str,
+                     allow_quick: bool = False) -> dict[str, int]:
+    """name -> us_per_call from the newest full run of a bench file.
+
+    ``--quick`` runs shrink the workloads without renaming the rows,
+    so comparing them against a full-run baseline is meaningless —
+    the newest non-quick entry is used unless ``allow_quick``.
+    Returns {} when no eligible run exists.
+    """
+    with open(bench_path) as f:
+        data = json.load(f)
+    runs = data.get("runs") or []
+    if not allow_quick:
+        runs = [r for r in runs if not r.get("quick")]
+    if not runs:
+        return {}
+    return {r["name"]: int(r["us_per_call"]) for r in runs[-1]["rows"]}
+
+
+def discover_suites(bench_dir: str) -> list[str]:
+    return sorted(
+        os.path.basename(p)[len("BENCH_"):-len(".json")]
+        for p in glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
+
+
+def compare(current: dict[str, int], baseline: dict[str, int],
+            threshold: float, min_us: float) -> list[str]:
+    """Returns the list of regression messages (empty = pass)."""
+    regressions = []
+    for name, us in sorted(current.items()):
+        base = baseline.get(name)
+        if base is None:
+            print(f"  new row (not gated): {name} = {us}us")
+            continue
+        if max(base, us) < min_us:
+            # jitter band only when BOTH sides are tiny — a row that
+            # jumps from 40us to 40000us is a real regression
+            continue
+        pct = (us - base) / base * 100.0
+        marker = "REGRESSION" if pct > threshold else "ok"
+        print(f"  {marker:>10}  {name}: {base}us -> {us}us "
+              f"({pct:+.1f}%)")
+        if pct > threshold:
+            # row names already carry the suite prefix
+            regressions.append(
+                f"{name}: {base}us -> {us}us ({pct:+.1f}% "
+                f"> +{threshold:.0f}%)")
+    for name in sorted(set(baseline) - set(current)):
+        print(f"  retired row (not gated): {name}")
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Fail when a BENCH_<suite>.json row slows down "
+                    "past the committed baseline.")
+    ap.add_argument("--bench-dir",
+                    default=os.environ.get("REPRO_BENCH_DIR", "."),
+                    help="directory holding BENCH_<suite>.json files")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed baseline JSON "
+                         "(suite -> row -> us_per_call)")
+    ap.add_argument("--suites", default=None,
+                    help="comma-separated suite names (default: every "
+                         "BENCH_*.json in --bench-dir)")
+    ap.add_argument("--threshold", type=float, default=15.0,
+                    help="max tolerated slowdown, percent (default 15)")
+    ap.add_argument("--min-us", type=float, default=100.0,
+                    help="ignore rows faster than this on either side "
+                         "(dispatch jitter; default 100)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from the current bench "
+                         "files and exit 0")
+    ap.add_argument("--allow-quick", action="store_true",
+                    help="also accept --quick runs (shrunken "
+                         "workloads, same row names — off by default)")
+    args = ap.parse_args(argv)
+
+    explicit = args.suites is not None
+    suites = (args.suites.split(",") if explicit
+              else discover_suites(args.bench_dir))
+    if not suites:
+        print(f"no BENCH_*.json files under {args.bench_dir!r}; "
+              "nothing to gate")
+        return 0
+
+    baseline_all: dict[str, dict[str, int]] = {}
+    if os.path.exists(args.baseline):
+        with open(args.baseline) as f:
+            baseline_all = json.load(f)
+
+    failures: list[str] = []
+    missing: list[str] = []
+    for suite in suites:
+        path = os.path.join(args.bench_dir, f"BENCH_{suite}.json")
+        if not os.path.exists(path):
+            missing.append(suite)
+            print(f"# suite {suite}: {path} not found — run "
+                  f"`python -m benchmarks.run --only {suite}` first")
+            continue
+        current = load_latest_rows(path, args.allow_quick)
+        if not current:
+            missing.append(suite)
+            print(f"# suite {suite}: no full (non---quick) run in "
+                  f"{path} — rerun without --quick, or pass "
+                  f"--allow-quick")
+            continue
+        print(f"# suite {suite} ({len(current)} rows)")
+        if args.update_baseline:
+            baseline_all[suite] = current
+            continue
+        failures += compare(current, baseline_all.get(suite, {}),
+                            args.threshold, args.min_us)
+
+    if args.update_baseline:
+        with open(args.baseline, "w") as f:
+            json.dump(baseline_all, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"baseline updated: {args.baseline}")
+        return 0
+    if missing and explicit:
+        # a suite the caller NAMED must actually be gated — otherwise
+        # a drifted CI step (typo'd name, regenerate step dropped)
+        # turns the gate silently vacuous
+        print(f"\nFAIL: explicitly requested suite(s) with no gateable "
+              f"bench run: {', '.join(missing)}")
+        return 1
+    if missing and not failures:
+        print(f"\n{len(missing)} suite(s) had no bench file; gated "
+              "rows passed")
+    if failures:
+        print(f"\nFAIL: {len(failures)} row(s) regressed past "
+              f"+{args.threshold:.0f}%:")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print("\nbench regression gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

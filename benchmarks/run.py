@@ -14,10 +14,10 @@ import sys
 import time
 
 from benchmarks import (bench_kernels, bench_maecho_agg, bench_qp_batch,
-                        fig4_cvae, fig8_mu, fig9_multiround,
-                        roofline_report, table1_multimodel,
-                        table4_beta_sweep, table5_local_steps,
-                        table6_svd)
+                        bench_sharded_agg, fig4_cvae, fig8_mu,
+                        fig9_multiround, roofline_report,
+                        table1_multimodel, table4_beta_sweep,
+                        table5_local_steps, table6_svd)
 from benchmarks.common import drain_rows, persist_rows
 
 SUITES = {
@@ -31,6 +31,7 @@ SUITES = {
     "kernels": bench_kernels.run,
     "maecho_agg": bench_maecho_agg.run,
     "qp_batch": bench_qp_batch.run,
+    "sharded_agg": bench_sharded_agg.run,
     "roofline": roofline_report.run,
 }
 

@@ -46,6 +46,23 @@ Backends — the ``backend`` argument of :func:`maecho_aggregate`:
     time, the whole τ-loop still jits as one program.
   - ``"auto"``: ``"kernel"`` for leaves big enough to tile
     (min dim ≥ 128), ``"oracle"`` otherwise.
+  - ``"sharded"``: the mesh-sharded pipeline.  Eligible leaves (2-D,
+    unstacked, out-dim tile count divisible by the mesh-axis size —
+    ``ops.sharded_ok``) run the streaming gram/apply under
+    ``shard_map`` over ``MAEchoConfig.mesh_axis``: each device owns an
+    out-row shard, forms only its residual tiles, and ONE ``psum``
+    per leaf per outer iteration reconstructs the (N, N) Gram; the
+    stacked QP solve stays global and the Eq. 7/11 applies run purely
+    on the owned rows (compressed-residual reuse intact).  Ineligible
+    leaves degrade to the single-device ``"auto"`` dispatch.  Pass the
+    mesh via ``maecho_aggregate(..., mesh=...)`` (default: a 1-D mesh
+    over every visible device).
+
+Ragged participation (``maecho_aggregate(..., client_mask=...)``): an
+optional per-leaf boolean client mask rides the batched QP's validity
+masking — masked-out clients get exactly α = 0 (their residuals never
+touch the Eq. 7 update), their anchors Vᵢ are frozen, and the result
+matches aggregating the participating subset alone (same init point).
 
 The QP and the padding logic (``repro.kernels.ops._pad_to``, zero
 padding is exact for all three passes) are shared between backends;
@@ -98,6 +115,7 @@ class MAEchoConfig:
     init: str = "average"         # average | first | random
     eps: float = 1e-12
     qp_batched: bool = True       # one stacked PGD solve per outer iter
+    mesh_axis: str = "data"       # shard_map axis for backend="sharded"
 
 
 # --------------------------------------------------------------------------
@@ -136,13 +154,14 @@ def _apply_P(delta, P, convention: str):
     return P @ delta                        # (in,in)@(in,out)
 
 
-def _qp_alpha(G, cfg: MAEchoConfig):
+def _qp_alpha(G, cfg: MAEchoConfig, mask=None):
     """Eq. 6 dual QP for the sequential (per-leaf) path.  Delegates to
     ``qp.solve_qp`` — the same ``_pgd_masked`` body the batched solver
     vmaps, so batched/sequential parity is structural, not maintained
     by hand.  (The jitted wrapper traces inline under the enclosing
-    jit; the whole aggregation still compiles as one program.)"""
-    return qp_mod.solve_qp(G, cfg.C, iters=cfg.qp_iters)
+    jit; the whole aggregation still compiles as one program.)
+    ``mask`` is the leaf's participation mask (ragged cohorts)."""
+    return qp_mod.solve_qp(G, cfg.C, iters=cfg.qp_iters, mask=mask)
 
 
 def _kernel_eligible(W, P) -> bool:
@@ -158,29 +177,56 @@ def _kernel_eligible(W, P) -> bool:
 def _use_kernel(W, P, backend: str) -> bool:
     """Does this leaf take the fused streaming pipeline?  Must agree
     between the gram and apply halves — both recompute it from the
-    same static shapes."""
+    same static shapes.  ``backend="sharded"`` lands here for leaves
+    that failed :func:`_use_sharded` — they take the "auto" rule (the
+    single-device kernel path when big enough to tile)."""
     if backend == "oracle" or not _kernel_eligible(W, P):
         return False
     from repro.kernels.ops import DEFAULT_BLOCK
     return backend == "kernel" or min(W.shape) >= DEFAULT_BLOCK
 
 
+def _use_sharded(W, P, backend: str, mesh, convention: str,
+                 axis) -> bool:
+    """Does this leaf take the out-dim mesh-sharded pipeline?  Needs
+    ``backend="sharded"``, a mesh that actually carries the configured
+    axis, a kernel-eligible 2-D leaf, and even block-granular
+    divisibility of the (kernel-layout) out-dim over the axis
+    (``ops.sharded_ok`` — the sharding rules' ``_ok`` contract).
+    Anything else falls back through :func:`_use_kernel` to the
+    single-device path.  Static shapes only — the gram and apply
+    halves must agree."""
+    if backend != "sharded" or mesh is None or not _kernel_eligible(W, P):
+        return False
+    names = (axis,) if isinstance(axis, str) else tuple(axis)
+    if any(n not in mesh.shape for n in names):
+        return False               # shard_map would KeyError the name
+    from repro.kernels import ops
+    out_d, in_d = (W.shape if convention == "oi" else W.shape[::-1])
+    return ops.sharded_ok(out_d, in_d, ops.axis_size_of(mesh, axis))
+
+
+def _to_kernel_layout(W, V, P, convention: str):
+    """The kernel pipelines are "oi"-native; "io" leaves are transposed
+    around the call (XLA fuses the transposes into the kernels' operand
+    loads).  Shared by the streaming and sharded gram halves — one copy
+    of the layout contract."""
+    if convention != "io":
+        return W, V, P
+    # oracle applies delta·P from the left for "io": (PᵢΔ)ᵀ = ΔᵀPᵢᵀ
+    Pk = jnp.swapaxes(P, 1, 2) if (not isinstance(P, dict)
+                                   and P.ndim == 3) else P
+    return W.T, jnp.swapaxes(V, 1, 2), Pk
+
+
 def _leaf_gram_kernel(W, V, P, convention: str):
     """Gram half of the fused streaming pipeline: the Eq. 6 Gram plus
     the padded-operand reuse context (padding/kind dispatch and the
     factored-path compressed-residual sharing live in
-    ``ops.maecho_streaming_gram``).  Kernels are "oi"-native; "io"
-    leaves are transposed around the call (XLA fuses the transposes
-    into the kernels' operand loads)."""
+    ``ops.maecho_streaming_gram``)."""
     from repro.kernels import ops
 
-    if convention == "io":
-        Wk, Vk = W.T, jnp.swapaxes(V, 1, 2)
-        # oracle applies delta·P from the left for "io": (PᵢΔ)ᵀ = ΔᵀPᵢᵀ
-        Pk = jnp.swapaxes(P, 1, 2) if (not isinstance(P, dict)
-                                       and P.ndim == 3) else P
-    else:
-        Wk, Vk, Pk = W, V, P
+    Wk, Vk, Pk = _to_kernel_layout(W, V, P, convention)
     return ops.maecho_streaming_gram(Wk, Vk, Pk)
 
 
@@ -192,6 +238,32 @@ def _leaf_apply_kernel(alpha, ctx, cfg: MAEchoConfig, convention: str):
     W_new, V_new = ops.maecho_streaming_apply(
         alpha, ctx, eta=cfg.eta, frac=cfg.mu / (1.0 + cfg.mu),
         norm=cfg.norm, eps=cfg.eps)
+    if convention == "io":
+        return W_new.T, jnp.swapaxes(V_new, 1, 2)
+    return W_new, V_new
+
+
+def _leaf_gram_sharded(W, V, P, cfg: MAEchoConfig, convention: str,
+                       mesh):
+    """Gram half of the mesh-sharded pipeline: the shared "oi"-native
+    layout contract (:func:`_to_kernel_layout`), with the out-rows
+    shard_map'd over ``cfg.mesh_axis`` (one Gram psum)."""
+    from repro.kernels import ops
+
+    Wk, Vk, Pk = _to_kernel_layout(W, V, P, convention)
+    return ops.maecho_sharded_gram(Wk, Vk, Pk, mesh=mesh,
+                                   axis=cfg.mesh_axis)
+
+
+def _leaf_apply_sharded(alpha, ctx, cfg: MAEchoConfig, convention: str,
+                        mesh):
+    """Update half of the mesh-sharded pipeline: Eq. 7 + Eq. 11 run
+    row-local on each device's owned shard — no collectives."""
+    from repro.kernels import ops
+
+    W_new, V_new = ops.maecho_sharded_apply(
+        alpha, ctx, mesh=mesh, axis=cfg.mesh_axis, eta=cfg.eta,
+        frac=cfg.mu / (1.0 + cfg.mu), norm=cfg.norm, eps=cfg.eps)
     if convention == "io":
         return W_new.T, jnp.swapaxes(V_new, 1, 2)
     return W_new, V_new
@@ -232,55 +304,65 @@ def _leaf_apply_oracle(W, V, P, R, alpha, cfg: MAEchoConfig,
 
 
 def _leaf_step(W, V, P, cfg: MAEchoConfig, convention: str,
-               backend: str = "oracle"):
+               backend: str = "oracle", mesh=None, mask=None):
     """One Algorithm-1 iteration for a single layer leaf (the
     sequential-QP path: gram → own PGD solve → apply).
 
     W: (...,);  V: (N, ...);  P: (N, [in, in] | [in] | []).
     Returns (W', V').
     """
+    if _use_sharded(W, P, backend, mesh, convention, cfg.mesh_axis):
+        G, ctx = _leaf_gram_sharded(W, V, P, cfg, convention, mesh)
+        return _leaf_apply_sharded(_qp_alpha(G, cfg, mask), ctx, cfg,
+                                   convention, mesh)
     if _use_kernel(W, P, backend):
         G, ctx = _leaf_gram_kernel(W, V, P, convention)
-        return _leaf_apply_kernel(_qp_alpha(G, cfg), ctx, cfg,
+        return _leaf_apply_kernel(_qp_alpha(G, cfg, mask), ctx, cfg,
                                   convention)
     G, R = _leaf_gram_oracle(W, V, P, convention)
-    return _leaf_apply_oracle(W, V, P, R, _qp_alpha(G, cfg), cfg,
+    return _leaf_apply_oracle(W, V, P, R, _qp_alpha(G, cfg, mask), cfg,
                               convention)
 
 
 def _dispatch_leaf(W, V, P, cfg: MAEchoConfig, convention: str,
-                   levels: int = 0, backend: str = "oracle"):
+                   levels: int = 0, backend: str = "oracle", mesh=None,
+                   mask=None):
     """``levels`` leading stacked-layer axes are vmapped away; the QP is
     then solved per scanned layer, matching the paper's per-layer loop.
     Stacked leaves stay on the oracle (Pallas under vmap is an open
-    item — ROADMAP)."""
+    item — ROADMAP); the participation mask is shared by every scanned
+    layer of a leaf."""
     if levels > 0:
         # V/P: (N, L, ...) -> vmap over L (axis 1 of V/P, axis 0 of W)
         return jax.vmap(
             lambda w, v, p: _dispatch_leaf(w, v, p, cfg, convention,
-                                           levels - 1, "oracle"),
+                                           levels - 1, "oracle",
+                                           mask=mask),
             in_axes=(0, 1, 1), out_axes=(0, 1))(W, V, P)
-    return _leaf_step(W, V, P, cfg, convention, backend)
+    return _leaf_step(W, V, P, cfg, convention, backend, mesh, mask)
 
 
 # --------------------------------------------------------------------------
 # batched QP: gram/apply leaf dispatch around one stacked PGD solve
 # --------------------------------------------------------------------------
 def _leaf_gram(W, V, P, cfg: MAEchoConfig, convention: str,
-               levels: int = 0, backend: str = "oracle"):
+               levels: int = 0, backend: str = "oracle", mesh=None):
     """Gram phase of the batched outer iteration.
 
     Returns ``(G, ctx)``: G carries any stacked-layer axes in front of
     its trailing (N, N) — the caller flattens those into the QP batch
     axis — and ``ctx`` is the per-leaf reuse payload for
-    :func:`_leaf_apply` (the oracle residual, or the kernel pipeline's
-    padded-operand context).  Stacked leaves vmap the oracle gram, so
-    a leaf with L scanned layers contributes L rows to the batch."""
+    :func:`_leaf_apply` (the oracle residual, or the kernel/sharded
+    pipeline's padded-operand context).  Stacked leaves vmap the
+    oracle gram, so a leaf with L scanned layers contributes L rows to
+    the batch."""
     if levels > 0:
         return jax.vmap(
             lambda w, v, p: _leaf_gram(w, v, p, cfg, convention,
                                        levels - 1, "oracle"),
             in_axes=(0, 1, 1), out_axes=0)(W, V, P)
+    if _use_sharded(W, P, backend, mesh, convention, cfg.mesh_axis):
+        return _leaf_gram_sharded(W, V, P, cfg, convention, mesh)
     if _use_kernel(W, P, backend):
         return _leaf_gram_kernel(W, V, P, convention)
     return _leaf_gram_oracle(W, V, P, convention)
@@ -288,7 +370,7 @@ def _leaf_gram(W, V, P, cfg: MAEchoConfig, convention: str,
 
 def _leaf_apply(W, V, P, ctx, alpha, cfg: MAEchoConfig,
                 convention: str, levels: int = 0,
-                backend: str = "oracle"):
+                backend: str = "oracle", mesh=None):
     """Apply phase of the batched outer iteration: scatter this leaf's
     τ rows of the stacked solve back through Eq. 7 / Eq. 11.  ``alpha``
     carries the leaf's stacked-layer axes in front of its trailing N,
@@ -300,6 +382,8 @@ def _leaf_apply(W, V, P, ctx, alpha, cfg: MAEchoConfig,
                                               "oracle"),
             in_axes=(0, 1, 1, 0, 0), out_axes=(0, 1))(W, V, P, ctx,
                                                       alpha)
+    if _use_sharded(W, P, backend, mesh, convention, cfg.mesh_axis):
+        return _leaf_apply_sharded(alpha, ctx, cfg, convention, mesh)
     if _use_kernel(W, P, backend):
         return _leaf_apply_kernel(alpha, ctx, cfg, convention)
     return _leaf_apply_oracle(W, V, P, ctx, alpha, cfg, convention)
@@ -336,14 +420,17 @@ def init_global(client_weights: list[Pytree], how: str,
 
 
 @partial(jax.jit, static_argnames=("cfg", "convention", "levels",
-                                   "backend"))
+                                   "backend", "mesh"))
 def _maecho_jit(W0, V0, P, cfg: MAEchoConfig, convention: str,
-                levels: tuple, backend: str = "oracle"):
+                levels: tuple, backend: str = "oracle", mesh=None,
+                masks=None):
     def outer(_, state):
         W, V = state
         flatW, treedef = jax.tree_util.tree_flatten(W)
         flatV = treedef.flatten_up_to(V)
         flatP = treedef.flatten_up_to(P)
+        flatM = (list(masks) if masks is not None
+                 else [None] * len(flatW))
         if cfg.qp_batched:
             # Phase 1: every leaf's (and every scanned layer's) Eq. 6
             # Gram, assembled into one (L, N, N) stack.  N — the
@@ -353,13 +440,24 @@ def _maecho_jit(W0, V0, P, cfg: MAEchoConfig, convention: str,
             grams, ctxs = [], []
             for w, v, p, lv in zip(flatW, flatV, flatP, levels):
                 g, ctx = _leaf_gram(w, v, p, cfg, convention, lv,
-                                    backend)
+                                    backend, mesh)
                 grams.append(g)
                 ctxs.append(ctx)
             Gstack, n_valid = qp_mod.stack_grams(grams)
-            # Phase 2: ONE vmapped PGD solve for the whole batch …
-            alphas = qp_mod.solve_qp_batched(Gstack, cfg.C,
-                                             cfg.qp_iters, n_valid)
+            # Phase 2: ONE vmapped PGD solve for the whole batch —
+            # with ragged participation, each leaf's client mask
+            # (broadcast over its scanned layers) rides the solver's
+            # validity masking instead of the prefix n_valid.
+            if masks is None:
+                alphas = qp_mod.solve_qp_batched(Gstack, cfg.C,
+                                                 cfg.qp_iters, n_valid)
+            else:
+                rows = [jnp.broadcast_to(m, (math.prod(g.shape[:-2]),)
+                                         + m.shape)
+                        for g, m in zip(grams, flatM)]
+                alphas = qp_mod.solve_qp_batched(
+                    Gstack, cfg.C, cfg.qp_iters,
+                    mask=jnp.concatenate(rows, 0))
             # Phase 3: … scattered back through each leaf's Eq. 7/11.
             out, ofs = [], 0
             for w, v, p, lv, ctx, g in zip(flatW, flatV, flatP, levels,
@@ -369,10 +467,20 @@ def _maecho_jit(W0, V0, P, cfg: MAEchoConfig, convention: str,
                     g.shape[:-2] + alphas.shape[-1:])
                 ofs += cnt
                 out.append(_leaf_apply(w, v, p, ctx, a, cfg,
-                                       convention, lv, backend))
+                                       convention, lv, backend, mesh))
         else:
-            out = [_dispatch_leaf(w, v, p, cfg, convention, lv, backend)
-                   for w, v, p, lv in zip(flatW, flatV, flatP, levels)]
+            out = [_dispatch_leaf(w, v, p, cfg, convention, lv, backend,
+                                  mesh, m)
+                   for w, v, p, lv, m in zip(flatW, flatV, flatP,
+                                             levels, flatM)]
+        if masks is not None:
+            # non-participants contribute nothing (α = 0 via the QP
+            # mask) and their anchors stay put — the run matches
+            # aggregating the participating subset alone
+            out = [(w2, jnp.where(
+                        m.reshape((-1,) + (1,) * (v1.ndim - 1)),
+                        v2, v1))
+                   for (w2, v2), v1, m in zip(out, flatV, flatM)]
         W = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
         V = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
         return W, V
@@ -387,6 +495,47 @@ def _maecho_jit(W0, V0, P, cfg: MAEchoConfig, convention: str,
     return W, V
 
 
+def _default_mesh(axis_name: str):
+    """1-D mesh over every visible device — the ``backend="sharded"``
+    convenience default, so ``maecho_backend="sharded"`` works without
+    explicit mesh plumbing (pass a real mesh for production)."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(jax.devices()), (axis_name,))
+
+
+def _normalize_client_mask(client_mask, W0, n_clients: int):
+    """Per-leaf (N,) boolean masks, aligned with ``tree_flatten(W0)``.
+
+    Accepts one (N,) mask (applies to every leaf) or a pytree matching
+    the weight structure whose leaves are (N,) masks."""
+    if (hasattr(client_mask, "ndim")
+            or (isinstance(client_mask, (list, tuple))
+                and not any(isinstance(x, (list, tuple, dict))
+                            for x in client_mask))):
+        m = jnp.asarray(client_mask, bool)
+        mask_tree = trees.tree_map(lambda _: m, W0)
+    else:
+        mask_tree = jax.tree_util.tree_map(
+            lambda x: jnp.asarray(x, bool), client_mask)
+    treedef = jax.tree_util.tree_structure(W0)
+    masks = tuple(treedef.flatten_up_to(mask_tree))
+    for m in masks:
+        if m.shape != (n_clients,):
+            raise ValueError(
+                f"client_mask leaves must be ({n_clients},) booleans, "
+                f"got shape {m.shape}")
+        # concrete here (outside jit): an all-False leaf would make
+        # the Σα = 1 constraint unsatisfiable and silently return the
+        # init point — surface the upstream participation bug instead
+        if not bool(m.any()):
+            raise ValueError(
+                "client_mask excludes every client for some leaf — "
+                "at least one participant is required")
+    return masks
+
+
 def maecho_aggregate(
     client_weights: list[Pytree],
     projections: Optional[list[Pytree]] = None,
@@ -397,6 +546,8 @@ def maecho_aggregate(
     stack_levels=None,
     return_anchors: bool = False,
     backend: str = "oracle",
+    mesh=None,
+    client_mask=None,
 ):
     """Run Algorithm 1.  Returns the global model pytree.
 
@@ -407,16 +558,34 @@ def maecho_aggregate(
                     ``None`` (all 0, the paper's MLP/CNN layout), a
                     pytree of ints matching the weights, or a callable
                     ``path -> int`` (the LLM scan-over-layers layout).
-    backend:        ``"oracle"`` | ``"kernel"`` | ``"auto"`` — the jnp
-                    reference path vs the fused streaming Pallas
-                    pipeline (module docstring).
+    backend:        ``"oracle"`` | ``"kernel"`` | ``"auto"`` |
+                    ``"sharded"`` — the jnp reference path, the fused
+                    streaming Pallas pipeline, or its out-dim
+                    mesh-sharded form (module docstring).
+    mesh:           ``jax.sharding.Mesh`` carrying ``cfg.mesh_axis``
+                    for ``backend="sharded"`` (default: a 1-D mesh
+                    over every visible device).  Ignored otherwise.
+    client_mask:    optional ragged-participation mask — one (N,)
+                    boolean vector, or a pytree of them matching the
+                    weight structure (per-leaf client subsets).
+                    Masked-out clients get exactly α = 0, their
+                    anchors are frozen, and the result matches
+                    aggregating the subset alone.  At least one client
+                    must be masked in per leaf.
     """
-    if backend not in ("oracle", "kernel", "auto"):
+    if backend not in ("oracle", "kernel", "auto", "sharded"):
         raise ValueError(f"unknown backend {backend!r}")
+    if backend == "sharded" and mesh is None:
+        mesh = _default_mesh(cfg.mesh_axis)
+    if backend != "sharded":
+        mesh = None                 # keep the jit cache key canonical
     if projections is None:
         projections = default_projections(client_weights)
     W0 = (init_point if init_point is not None
           else init_global(client_weights, cfg.init, rng))
+    masks = (None if client_mask is None else
+             _normalize_client_mask(client_mask, W0,
+                                    len(client_weights)))
     if stack_levels is None:
         levels_tree = trees.tree_map(lambda _: 0, W0)
     elif callable(stack_levels):
@@ -427,5 +596,6 @@ def maecho_aggregate(
     levels = tuple(jax.tree_util.tree_leaves(levels_tree))
     V0 = trees.tree_map(lambda *xs: jnp.stack(xs, 0), *client_weights)
     P = trees.tree_map(lambda *xs: jnp.stack(xs, 0), *projections)
-    W, V = _maecho_jit(W0, V0, P, cfg, convention, levels, backend)
+    W, V = _maecho_jit(W0, V0, P, cfg, convention, levels, backend,
+                       mesh, masks)
     return (W, V) if return_anchors else W

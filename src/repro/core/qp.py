@@ -59,15 +59,20 @@ def project_capped_simplex(x, C: float, iters: int = 60, mask=None):
 
 
 @partial(jax.jit, static_argnames=("iters",))
-def solve_qp(G, C: float, iters: int = 300):
+def solve_qp(G, C: float, iters: int = 300, mask=None):
     """Accelerated PGD for min ½αᵀGα on the capped simplex.
 
     G: (N, N) PSD Gram matrix (any positive rescaling of G gives the
     same minimiser, so callers may pass unscaled residual inner
-    products).  Returns α ∈ R^N.  The all-valid case of
+    products).  Returns α ∈ R^N.  ``mask`` (optional (N,) boolean)
+    restricts the simplex to the masked-in clients — ragged
+    participation: excluded coordinates come back exactly 0, and the
+    solution equals the subset QP's.  The all-valid case of
     :func:`_pgd_masked` — one iteration body to maintain.
     """
-    return _pgd_masked(G, jnp.ones((G.shape[0],), bool), C, iters)
+    if mask is None:
+        mask = jnp.ones((G.shape[0],), bool)
+    return _pgd_masked(G, jnp.asarray(mask, bool), C, iters)
 
 
 def _pgd_masked(G, mask, C: float, iters: int):
@@ -98,7 +103,8 @@ def _pgd_masked(G, mask, C: float, iters: int):
     return a
 
 
-def solve_qp_batched(G, C: float, iters: int = 300, n_valid=None):
+def solve_qp_batched(G, C: float, iters: int = 300, n_valid=None,
+                     mask=None):
     """One vmapped accelerated-PGD solve for a whole stack of QPs.
 
     G: (L, Nmax, Nmax) stacked Gram matrices — one per leaf (and per
@@ -109,12 +115,20 @@ def solve_qp_batched(G, C: float, iters: int = 300, n_valid=None):
     Rows/columns at index ≥ n_valid[l] are padding; the corresponding
     α entries come back as exact zeros.
 
+    ``mask`` (optional (L, Nmax) boolean) overrides ``n_valid`` with
+    arbitrary — not necessarily prefix — per-QP validity: the ragged
+    client-participation case, where each leaf's active client subset
+    is any subset of the stacked cohort.  Masked-out α entries come
+    back exactly 0 and the solve matches the subset QP.
+
     Identical iteration rule to :func:`solve_qp` (same step size, same
     projection bisection), so a full-size batch matches L sequential
     solves to float32 round-off.  Returns (L, Nmax).
     """
     L, Nmax = G.shape[0], G.shape[-1]
-    if n_valid is None:
+    if mask is not None:
+        mask = jnp.asarray(mask, bool)
+    elif n_valid is None:
         mask = jnp.ones((L, Nmax), bool)
     else:
         n_valid = jnp.asarray(n_valid, jnp.int32)

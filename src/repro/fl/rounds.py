@@ -12,8 +12,10 @@ aggregation call: with ``MAEchoConfig.qp_batched`` (default) every
 outer iteration stacks all layers' Gram matrices and issues a single
 vmapped PGD solve instead of one QP per layer — the round loop never
 serialises over leaves.  ``MultiRoundConfig.maecho_backend`` selects
-the per-leaf compute path (``"oracle"`` | ``"kernel"`` | ``"auto"``,
-see ``core.maecho``).
+the per-leaf compute path (``"oracle"`` | ``"kernel"`` | ``"auto"`` |
+``"sharded"``, see ``core.maecho``); for ``"sharded"`` pass the mesh
+through ``run_multi_round(..., mesh=...)`` (default: a 1-D mesh over
+every visible device).
 """
 from __future__ import annotations
 
@@ -39,9 +41,11 @@ class MultiRoundConfig:
     local: LocalTrainConfig = LocalTrainConfig(epochs=10)
     maecho: MAEchoConfig = MAEchoConfig(tau=20, eta=0.5)
     # "auto" promotes big leaves to the fused Pallas pipeline on TPU;
-    # the default stays "oracle" because interpret-mode kernel
-    # execution (this container) is simulation, not a speedup.
-    maecho_backend: str = "oracle"  # oracle | kernel | auto
+    # "sharded" additionally splits eligible leaves' out-rows over the
+    # mesh (run_multi_round's ``mesh`` argument).  The default stays
+    # "oracle" because interpret-mode kernel execution (this
+    # container) is simulation, not a speedup.
+    maecho_backend: str = "oracle"  # oracle | kernel | auto | sharded
     proj_alpha: float = 1.0
     seed: int = 0
 
@@ -53,8 +57,13 @@ def run_multi_round(
     cfg: MultiRoundConfig,
     global_init=None,
     on_round: Optional[Callable] = None,
+    mesh=None,
 ) -> tuple[list, float]:
-    """Returns (per-round global accuracies, final accuracy)."""
+    """Returns (per-round global accuracies, final accuracy).
+
+    ``mesh`` is threaded into the aggregation call for
+    ``maecho_backend="sharded"`` (``core.maecho`` builds a default
+    1-D all-devices mesh when it is None)."""
     rng = np.random.RandomState(cfg.seed)
     params = (global_init if global_init is not None
               else pm.init(spec, jax.random.PRNGKey(cfg.seed)))
@@ -81,7 +90,8 @@ def run_multi_round(
         if cfg.method == "maecho":
             fprojs = [_flatten_proj(pr) for pr in projs]
             new = maecho_aggregate(flat, fprojs, cfg.maecho,
-                                   backend=cfg.maecho_backend)
+                                   backend=cfg.maecho_backend,
+                                   mesh=mesh)
         else:
             from repro.core.aggregators import fedavg
             new = fedavg(flat)

@@ -56,6 +56,12 @@ def one_shot_aggregate(
 ):
     """Run one aggregation operator.  ``client_params`` in model layout
     (conv weights 4-D); projections from ``fl.client.compute_projections``.
+
+    Extra ``**kw`` flows through to the operator — for ``maecho``
+    that includes ``backend`` (``"oracle"`` | ``"kernel"`` | ``"auto"``
+    | ``"sharded"``), ``mesh`` (the device mesh for the sharded
+    pipeline) and ``client_mask`` (ragged participation); see
+    ``core.maecho.maecho_aggregate``.
     """
     flat, shapes = zip(*[_flatten_convs(p) for p in client_params])
     shapes = shapes[0]

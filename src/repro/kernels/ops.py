@@ -20,7 +20,10 @@ from __future__ import annotations
 
 import os
 
+import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
 
 from repro.kernels import ref
 from repro.kernels import flash_attention as _fa
@@ -36,8 +39,9 @@ __all__ = [
     "maecho_v_update_diag", "rank_downdate", "block_rls_update",
     "maecho_update_auto", "maecho_gram_auto", "maecho_v_update_auto",
     "maecho_streaming_step", "maecho_streaming_gram",
-    "maecho_streaming_apply", "flash_attention_auto",
-    "interpret_default", "DEFAULT_BLOCK",
+    "maecho_streaming_apply", "maecho_sharded_gram",
+    "maecho_sharded_apply", "sharded_ok", "axis_size_of",
+    "flash_attention_auto", "interpret_default", "DEFAULT_BLOCK",
 ]
 
 _INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
@@ -365,6 +369,175 @@ def maecho_streaming_step(W, V, P, qp, *, eta: float = 1.0,
     return maecho_streaming_apply(alpha, ctx, eta=eta, frac=frac,
                                   norm=norm, eps=eps, block=block,
                                   interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# mesh-sharded streaming pipeline: out-dim-parallel gram / apply
+# --------------------------------------------------------------------------
+def _axis_names(axis) -> tuple:
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+def axis_size_of(mesh, axis) -> int:
+    """Product of the named mesh axes' sizes (absent axes count 1).
+
+    Delegates to the sharding rules' ``mesh_axis_size`` — one copy of
+    the axis-size contract (imported lazily: the kernels layer stays
+    import-light)."""
+    from repro.sharding.rules import mesh_axis_size
+
+    return mesh_axis_size(mesh, _axis_names(axis))
+
+
+def sharded_ok(out_d: int, in_d: int, axis_size: int,
+               block: int = DEFAULT_BLOCK) -> bool:
+    """Eligibility of a leaf for the out-dim-sharded pipeline.
+
+    Both dims must reach one tile and the out-dim's *tile count* must
+    divide evenly over the axis — the sharding rules' ``_ok``
+    divisibility contract at block granularity (every device gets the
+    same number of whole tiles; GSPMD-style uneven shards would skew
+    the per-device kernels).  Ineligible leaves stay on the
+    single-device kernel/oracle path.
+    """
+    if out_d < block or in_d < block:
+        return False
+    return (-(-out_d // block)) % axis_size == 0
+
+
+def maecho_sharded_gram(W, V, P, *, mesh, axis="data",
+                        block: int = DEFAULT_BLOCK, interpret=None):
+    """Out-dim-sharded gram half of the streaming pipeline.
+
+    Same ``(G, ctx)`` contract as :func:`maecho_streaming_gram`, but
+    the leaf's out-rows are split over the ``axis`` mesh axes with
+    ``shard_map``: each device forms only its own
+    (out / axis_size, in) residual tiles in VMEM, contracts a partial
+    (N, N) Gram locally, and ONE ``psum`` over the axis reconstructs
+    the full replicated Gram that feeds the (global, unchanged) QP
+    solve.  The apply half (:func:`maecho_sharded_apply`) then runs
+    purely locally on the owned rows — no further collectives.
+
+    Operands are zero-padded so the out-dim is a multiple of
+    ``block × axis_size`` (even, block-tileable shards; zero padding
+    is exact for all three passes) and the in-dim to ``block``.  On
+    the factored path the (N, out, k) compressed residual is computed
+    *sharded* and carried in ``ctx`` for the Eq. 7 kernel — the
+    compressed-residual reuse survives the sharding.  Callers gate
+    eligibility with :func:`sharded_ok`; "oi" layout, like the rest of
+    the kernel pipeline.
+    """
+    names = _axis_names(axis)
+    asz = axis_size_of(mesh, axis)
+    out_d, in_d = W.shape
+    kind = _proj_kind(P)
+    itp = _resolve(interpret)
+    Wp, _ = _pad_to(_pad_to(W, block * asz, 0)[0], block, 1)
+    Vp, _ = _pad_to(_pad_to(V, block * asz, 1)[0], block, 2)
+    row = PartitionSpec(names, None)           # W rows
+    crow = PartitionSpec(None, names, None)    # V / A rows (axis 1)
+    rep2 = PartitionSpec(None, None)
+    rep3 = PartitionSpec(None, None, None)
+    if kind == "factored":
+        Up, sp = _pad_factored(P["U"], P["s"], block)
+
+        def body_f(Wl, Vl, U, s):
+            A = _mg.compressed_residual(Wl, Vl, U, s)
+            UT = jnp.swapaxes(U, 1, 2).astype(jnp.float32)
+            Gl = _mg.maecho_gram_left(A, UT, interpret=itp)
+            return jax.lax.psum(Gl, names), A
+
+        G, A = shard_map(body_f, mesh=mesh,
+                         in_specs=(row, crow, rep3, rep2),
+                         out_specs=(rep2, crow),
+                         check_rep=False)(Wp, Vp, Up, sp)
+        return G, (kind, Wp, Vp, (Up, sp, A), out_d, in_d)
+    if kind == "full":
+        Pk = _pad_to(_pad_to(P, block, 1)[0], block, 2)[0]
+
+        def body_d(Wl, Vl, Pl):
+            return jax.lax.psum(
+                _mg.maecho_gram(Wl, Vl, Pl, interpret=itp), names)
+
+        G = shard_map(body_d, mesh=mesh, in_specs=(row, crow, rep3),
+                      out_specs=rep2, check_rep=False)(Wp, Vp, Pk)
+    else:                                   # scalar / diag
+        p = _as_diag(P, in_d) if kind == "scalar" else P
+        Pk = _pad_to(p, block, 1)[0]
+
+        def body_g(Wl, Vl, pl):
+            return jax.lax.psum(
+                _mg.maecho_gram_diag(Wl, Vl, pl, interpret=itp), names)
+
+        G = shard_map(body_g, mesh=mesh, in_specs=(row, crow, rep2),
+                      out_specs=rep2, check_rep=False)(Wp, Vp, Pk)
+    return G, (kind, Wp, Vp, Pk, out_d, in_d)
+
+
+def maecho_sharded_apply(alpha, ctx, *, mesh, axis="data",
+                         eta: float = 1.0, frac: float = 0.5,
+                         norm: bool = False, eps: float = 1e-12,
+                         block: int = DEFAULT_BLOCK, interpret=None):
+    """Update half of the sharded pipeline: Eq. 7 then Eq. 11.
+
+    ``ctx`` is the context from :func:`maecho_sharded_gram` for the
+    same leaf.  Both phases are row-local under the same out-dim
+    sharding: Eq. 7 scales the owned rows' residuals by the replicated
+    α, and Eq. 11's row normalisation runs along the unsharded in-axis
+    — zero collectives (the gram phase's single psum is the outer
+    iteration's only one).  Returns ``(W', V')`` cropped to the
+    original shape.
+    """
+    kind, Wp, Vp, Pk, out_d, in_d = ctx
+    names = _axis_names(axis)
+    itp = _resolve(interpret)
+    bi = Wp.shape[1] if norm else block
+    row = PartitionSpec(names, None)
+    crow = PartitionSpec(None, names, None)
+    rep1 = PartitionSpec(None)
+    rep2 = PartitionSpec(None, None)
+    rep3 = PartitionSpec(None, None, None)
+    if kind == "factored":
+        Up, sp, A = Pk
+
+        def body_f(a, Wl, Vl, U, s, Al):
+            UT = jnp.swapaxes(U, 1, 2).astype(jnp.float32)
+            Wn = _mu.maecho_update_left(Wl, Al, UT, a, eta=eta,
+                                        interpret=itp)
+            Vn = _mv.maecho_v_update_factored(
+                Wn, Vl, U, s, frac=frac, norm=norm, eps=eps, bi=bi,
+                interpret=itp)
+            return Wn, Vn
+
+        Wn, Vn = shard_map(
+            body_f, mesh=mesh,
+            in_specs=(rep1, row, crow, rep3, rep2, crow),
+            out_specs=(row, crow), check_rep=False)(
+            alpha, Wp, Vp, Up, sp, A)
+    elif kind == "full":
+        def body_d(a, Wl, Vl, Pl):
+            Wn = _mu.maecho_update(Wl, Vl, Pl, a, eta=eta,
+                                   interpret=itp)
+            Vn = _mv.maecho_v_update(Wn, Vl, Pl, frac=frac, norm=norm,
+                                     eps=eps, bi=bi, interpret=itp)
+            return Wn, Vn
+
+        Wn, Vn = shard_map(
+            body_d, mesh=mesh, in_specs=(rep1, row, crow, rep3),
+            out_specs=(row, crow), check_rep=False)(alpha, Wp, Vp, Pk)
+    else:                                   # scalar / diag
+        def body_g(a, Wl, Vl, pl):
+            Wn = _mu.maecho_update_diag(Wl, Vl, pl, a, eta=eta,
+                                        interpret=itp)
+            Vn = _mv.maecho_v_update_diag(Wn, Vl, pl, frac=frac,
+                                          norm=norm, eps=eps, bi=bi,
+                                          interpret=itp)
+            return Wn, Vn
+
+        Wn, Vn = shard_map(
+            body_g, mesh=mesh, in_specs=(rep1, row, crow, rep2),
+            out_specs=(row, crow), check_rep=False)(alpha, Wp, Vp, Pk)
+    return Wn[:out_d, :in_d], Vn[:, :out_d, :in_d]
 
 
 def flash_attention_auto(q, k, v, *, causal: bool = True, bq: int = 256,

@@ -10,11 +10,24 @@ technique" hillclimb target in EXPERIMENTS.md §Perf.
 
   PYTHONPATH=src python -m repro.launch.dryrun_agg --arch llama3-8b \
       [--clients 8] [--multipod]
+
+``--sharded-smoke`` instead EXECUTES an 8-way out-dim-sharded
+aggregation (``core.maecho`` backend="sharded") on forced host devices
+and asserts <1e-3 parity with the single-device oracle — the CI smoke
+for the mesh-sharded pipeline:
+
+  REPRO_HOST_DEVICES=8 PYTHONPATH=src \
+      python -m repro.launch.dryrun_agg --sharded-smoke
+
+``REPRO_HOST_DEVICES`` (default 512) sets the forced host platform
+device count; it must act before the first jax import, hence env var
+rather than CLI flag.
 """
 import os
 
 os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_HOST_DEVICES", "512") + " "
     + os.environ.get("XLA_FLAGS", ""))
 
 import argparse      # noqa: E402
@@ -172,6 +185,66 @@ def run(arch: str, n_clients: int, multi_pod: bool,
     return rec
 
 
+def run_sharded_smoke(n_devices: int = 8, out_d: int = 1024,
+                      in_d: int = 256, n_clients: int = 4,
+                      tau: int = 2) -> dict:
+    """Execute (not just compile) an ``n_devices``-way out-dim-sharded
+    aggregation and check parity against the single-device oracle.
+
+    A mixed tree — dense, factored and diagonal projectors, a
+    non-divisible leaf exercising the single-device fallback, and a
+    bias on the scalar rule — so one run covers every dispatch branch
+    of ``backend="sharded"``.  Returns the record; parity must be
+    <1e-3 in weight space (the ISSUE acceptance bound).
+    """
+    from repro.core.maecho import MAEchoConfig, maecho_aggregate
+    from repro.launch.mesh import make_debug_mesh
+
+    mesh = make_debug_mesh(n_devices, 1)
+    odd = 2 * (out_d // n_devices) + 64        # tiles don't divide
+    clients, projs = [], []
+    for i in range(n_clients):
+        k = jax.random.PRNGKey(31 * i + 7)
+        kd, kf, kg, kb = (jax.random.fold_in(k, t) for t in range(4))
+        U = jnp.linalg.qr(jax.random.normal(kf, (in_d, 32)))[0]
+        s = jax.random.uniform(jax.random.fold_in(kf, 1), (32,))
+        Ud = jnp.linalg.qr(jax.random.normal(kd, (in_d, 16)))[0]
+        sd = jax.random.uniform(jax.random.fold_in(kd, 1), (16,))
+        clients.append({
+            "dense": jax.random.normal(kd, (out_d, in_d)) * 0.3,
+            "fact": jax.random.normal(kf, (out_d, in_d)) * 0.3,
+            "diag": jax.random.normal(kg, (out_d, in_d)) * 0.3,
+            "odd": jax.random.normal(jax.random.fold_in(kg, 2),
+                                     (odd, in_d)) * 0.3,
+            "b": jax.random.normal(kb, (out_d,)) * 0.1,
+        })
+        projs.append({
+            "dense": (Ud * sd) @ Ud.T,
+            "fact": {"U": U, "s": s},
+            "diag": jax.random.uniform(jax.random.fold_in(kg, 1),
+                                       (in_d,)),
+            "odd": (Ud * sd) @ Ud.T,
+            "b": jnp.ones(()),
+        })
+    cfg = MAEchoConfig(tau=tau, eta=0.5, qp_iters=60)
+    t0 = time.time()
+    a = maecho_aggregate(clients, projs, cfg, backend="oracle")
+    b = maecho_aggregate(clients, projs, cfg, backend="sharded",
+                         mesh=mesh)
+    err = max(float(jnp.max(jnp.abs(a[key] - b[key]))) for key in a)
+    ok = err < 1e-3
+    rec = {"kind": "sharded_smoke", "devices": n_devices,
+           "out_d": out_d, "in_d": in_d, "n_clients": n_clients,
+           "tau": tau, "max_abs_err": err,
+           "status": "ok" if ok else "PARITY_FAIL",
+           "elapsed_s": round(time.time() - t0, 1)}
+    print(f"[{'ok' if ok else 'FAIL'}] sharded smoke: {n_devices} "
+          f"devices, out={out_d} (+{odd} fallback leaf), "
+          f"max|sharded - oracle| = {err:.2e} "
+          f"({rec['elapsed_s']}s)")
+    return rec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3_8b")
@@ -179,7 +252,15 @@ def main() -> None:
     ap.add_argument("--multipod", action="store_true")
     ap.add_argument("--rank", type=int, default=0,
                     help="factored-P rank (0 = full projectors)")
+    ap.add_argument("--sharded-smoke", action="store_true",
+                    help="execute an 8-way sharded aggregation and "
+                         "assert parity with the oracle (set "
+                         "REPRO_HOST_DEVICES=8)")
+    ap.add_argument("--smoke-devices", type=int, default=8)
     args = ap.parse_args()
+    if args.sharded_smoke:
+        rec = run_sharded_smoke(args.smoke_devices)
+        raise SystemExit(0 if rec["status"] == "ok" else 1)
     rec = run(args.arch, args.clients, args.multipod, rank=args.rank)
     raise SystemExit(0 if rec["status"] == "ok" else 1)
 

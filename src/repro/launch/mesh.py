@@ -27,7 +27,19 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 
 def make_debug_mesh(n_data: int = 1, n_model: int = 1) -> Mesh:
-    """Tiny mesh over however many devices exist (tests)."""
-    devs = jax.devices()[: n_data * n_model]
-    return Mesh(np.asarray(devs).reshape(n_data, n_model),
+    """Tiny mesh (tests / forced-host-device smokes).
+
+    A device shortfall is an error naming the gap — like
+    ``make_production_mesh`` — instead of the old silent truncation
+    (which either reshaped fewer devices into the wrong mesh or died
+    in an opaque numpy reshape)."""
+    need = n_data * n_model
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"debug mesh ({n_data}, {n_model}) needs {need} devices, "
+            f"found {len(devs)} — force host platform devices with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            "before the first jax import (cf. repro.launch.dryrun)")
+    return Mesh(np.asarray(devs[:need]).reshape(n_data, n_model),
                 ("data", "model"))

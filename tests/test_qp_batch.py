@@ -57,6 +57,82 @@ def test_batched_matches_sequential_ragged(C):
         assert abs(got.sum() - 1.0) < 1e-4
 
 
+def test_batched_arbitrary_mask_matches_subset():
+    """A non-prefix boolean mask equals solving the subset QP — the
+    ragged-participation contract; masked coordinates stay exactly 0."""
+    G = _psd(6, 12, seed=5)
+    keep = np.array([True, False, True, True, False, True])
+    alphas = solve_qp_batched(G[None], 0.8, iters=300,
+                              mask=jnp.asarray(keep)[None])
+    got = np.asarray(alphas[0])
+    sub = np.asarray(solve_qp(G[np.ix_(keep, keep)], 0.8, iters=300))
+    np.testing.assert_allclose(got[keep], sub, atol=1e-3)
+    assert np.all(got[~keep] == 0.0)
+    assert abs(got.sum() - 1.0) < 1e-4
+
+
+# --------------------------------------------------------------------------
+# ragged client participation through maecho_aggregate
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("qp_batched", [True, False])
+def test_client_mask_matches_subset_aggregation(qp_batched):
+    """client_mask = aggregating the participating subset alone (same
+    init point), on both QP paths; non-participants' anchors frozen."""
+    from repro.core.maecho import init_global
+
+    clients = _clients(4, shape=(12, 6), seed0=21)
+    projs = _projs("full", 4, d=6, seed0=300)
+    keep = [0, 2, 3]
+    mask = jnp.asarray([i in keep for i in range(4)])
+    cfg = MAEchoConfig(tau=5, eta=0.5, qp_iters=120,
+                       qp_batched=qp_batched)
+    W0 = init_global(clients, "average")
+    masked, V = maecho_aggregate(clients, projs, cfg, init_point=W0,
+                                 client_mask=mask, return_anchors=True)
+    subset = maecho_aggregate([clients[i] for i in keep],
+                              [projs[i] for i in keep], cfg,
+                              init_point=W0)
+    for leaf in ("W", "b"):
+        np.testing.assert_allclose(np.asarray(masked[leaf]),
+                                   np.asarray(subset[leaf]), atol=1e-3)
+    # the masked-out client's anchor never moved
+    np.testing.assert_array_equal(np.asarray(V["W"][1]),
+                                  np.asarray(clients[1]["W"]))
+
+
+def test_client_mask_per_leaf_pytree():
+    """A per-leaf mask pytree applies a different client subset to
+    each leaf (here: all-in for W, a subset for b)."""
+    clients = _clients(3, shape=(10, 5), seed0=41)
+    projs = _projs("diag", 3, d=5, seed0=500)
+    cfg = MAEchoConfig(tau=4, eta=0.5, qp_iters=100)
+    mask_tree = {"W": jnp.asarray([True, True, True]),
+                 "b": jnp.asarray([True, False, True])}
+    out = maecho_aggregate(clients, projs, cfg, client_mask=mask_tree)
+    all_in = maecho_aggregate(clients, projs, cfg)
+    # W saw every client -> identical to the unmasked run
+    np.testing.assert_allclose(np.asarray(out["W"]),
+                               np.asarray(all_in["W"]), atol=1e-5)
+    # b didn't -> must differ from the unmasked run
+    assert float(jnp.max(jnp.abs(out["b"] - all_in["b"]))) > 1e-6
+
+
+def test_client_mask_bad_shape_raises():
+    clients = _clients(3, shape=(8, 4), seed0=61)
+    with pytest.raises(ValueError, match=r"client_mask"):
+        maecho_aggregate(clients, None, MAEchoConfig(tau=1),
+                         client_mask=jnp.asarray([True, False]))
+
+
+def test_client_mask_all_false_raises():
+    """An empty participant set is an upstream bug, not a silent
+    no-op aggregation."""
+    clients = _clients(3, shape=(8, 4), seed0=71)
+    with pytest.raises(ValueError, match=r"at least one participant"):
+        maecho_aggregate(clients, None, MAEchoConfig(tau=1),
+                         client_mask=jnp.zeros(3, bool))
+
+
 def test_stack_grams_flattens_leading_axes():
     """Stacked-layer gram blocks (L, N, N) flatten into the QP axis."""
     a = jnp.stack([_psd(4, 6, 0), _psd(4, 6, 1)])      # (2, 4, 4)

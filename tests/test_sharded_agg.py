@@ -1,0 +1,380 @@
+"""Mesh-sharded one-shot aggregation (ISSUE 3 tentpole).
+
+In-process tests run on the real single device (the shard_map path at
+axis size 1, eligibility logic against shape-only fake meshes, psum
+accounting, the debug-mesh shortfall error).  True multi-device runs
+need ``XLA_FLAGS=--xla_force_host_platform_device_count`` set before
+jax initializes, which a pytest session can't do retroactively — those
+parity/fallback checks subprocess (marked ``slow``).
+"""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core.maecho import MAEchoConfig, _use_sharded, maecho_aggregate
+from repro.kernels import ops, ref
+from repro.launch.mesh import make_debug_mesh
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+class FakeMesh:
+    """Shape-only mesh stand-in (cf. tests/test_sharding.py)."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+
+
+def _one_device_mesh():
+    return Mesh(np.asarray(jax.devices()[:1]), ("data",))
+
+
+def _proj_of_kind(k, kind, N, in_d, rank=24):
+    if kind == "scalar":
+        return jax.random.uniform(jax.random.fold_in(k, 2), (N,))
+    if kind == "diag":
+        return jax.random.uniform(jax.random.fold_in(k, 2), (N, in_d))
+    U = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(k, 2),
+                                        (N, in_d, min(rank, in_d))))[0]
+    s = jax.random.uniform(jax.random.fold_in(k, 3),
+                           (N, min(rank, in_d)))
+    if kind == "factored":
+        return {"U": U, "s": s}
+    return jnp.einsum("nik,nk,njk->nij", U, s, U)
+
+
+# --------------------------------------------------------------------------
+# eligibility: the block-granular `_ok` divisibility contract
+# --------------------------------------------------------------------------
+def test_sharded_ok_divisibility():
+    # 1024 = 8 tiles of 128: divides over 1/2/4/8, not 3
+    for asz in (1, 2, 4, 8):
+        assert ops.sharded_ok(1024, 256, asz)
+    assert not ops.sharded_ok(1024, 256, 3)
+    # 300 -> 3 tiles: not divisible by 8
+    assert not ops.sharded_ok(300, 256, 8)
+    assert ops.sharded_ok(300, 256, 3)
+    # below one tile on either dim: never sharded
+    assert not ops.sharded_ok(64, 256, 1)
+    assert not ops.sharded_ok(1024, 64, 8)
+    # padding rounds 4000 up to 32 tiles
+    assert ops.sharded_ok(4000, 128, 8)
+
+
+def test_axis_size_of():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert ops.axis_size_of(mesh, "data") == 16
+    assert ops.axis_size_of(mesh, ("pod", "data")) == 32
+    assert ops.axis_size_of(mesh, "absent") == 1
+
+
+def test_use_sharded_fallback_paths():
+    mesh = FakeMesh({"data": 8, "model": 1})
+    W = jnp.zeros((1024, 256))
+    P = jnp.zeros((3, 256, 256))
+    assert _use_sharded(W, P, "sharded", mesh, "oi", "data")
+    # io convention: the kernel-layout out-dim is W.shape[1]
+    assert _use_sharded(W.T, P, "sharded", mesh, "io", "data")
+    assert not _use_sharded(W.T, P, "sharded", mesh, "oi", "data")
+    # non-divisible out, wrong backend, missing mesh, 1-D leaf
+    assert not _use_sharded(jnp.zeros((300, 256)), P, "sharded", mesh,
+                            "oi", "data")
+    assert not _use_sharded(W, P, "kernel", mesh, "oi", "data")
+    assert not _use_sharded(W, P, "sharded", None, "oi", "data")
+    assert not _use_sharded(jnp.zeros((1024,)), jnp.zeros((3,)),
+                            "sharded", mesh, "oi", "data")
+    # a mesh without the configured axis: fall back, don't KeyError
+    assert not _use_sharded(W, P, "sharded", FakeMesh({"x": 8}),
+                            "oi", "data")
+    assert not _use_sharded(W, P, "sharded", mesh, "oi",
+                            ("pod", "data"))
+
+
+def test_sharded_backend_mesh_without_axis_falls_back():
+    """A mesh lacking cfg.mesh_axis degrades to the single-device
+    path end-to-end instead of crashing inside shard_map."""
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("x",))
+    N = 3
+    clients = [{"W": jax.random.normal(jax.random.PRNGKey(i),
+                                       (256, 140)) * 0.3}
+               for i in range(N)]
+    projs = [{"W": jax.random.uniform(jax.random.PRNGKey(9 + i),
+                                      (140,))}
+             for i in range(N)]
+    cfg = MAEchoConfig(tau=2, eta=0.5, qp_iters=40)
+    a = maecho_aggregate(clients, projs, cfg, backend="oracle")
+    b = maecho_aggregate(clients, projs, cfg, backend="sharded",
+                         mesh=mesh)
+    np.testing.assert_allclose(np.asarray(a["W"]), np.asarray(b["W"]),
+                               atol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# single-device mesh: the shard_map path itself (axis size 1)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ["scalar", "diag", "full", "factored"])
+def test_sharded_gram_apply_parity_one_device(kind):
+    N, out_d, in_d = 3, 256, 140          # odd in-dim: padding path
+    mesh = _one_device_mesh()
+    k = jax.random.PRNGKey(out_d + in_d)
+    W = jax.random.normal(k, (out_d, in_d)) * 0.3
+    V = jax.random.normal(jax.random.fold_in(k, 1),
+                          (N, out_d, in_d)) * 0.3
+    P = _proj_of_kind(k, kind, N, in_d)
+    alpha = jax.nn.softmax(jax.random.normal(jax.random.fold_in(k, 9),
+                                             (N,)))
+
+    def step(W, V, P):
+        G, ctx = ops.maecho_sharded_gram(W, V, P, mesh=mesh,
+                                         axis="data")
+        Wn, Vn = ops.maecho_sharded_apply(alpha, ctx, mesh=mesh,
+                                          axis="data", eta=0.7,
+                                          frac=0.5, norm=True)
+        return G, Wn, Vn
+
+    G, Wn, Vn = jax.jit(step)(W, V, P)
+    Gr = ref.maecho_gram_ref(W, V, P)
+    Wr = ref.maecho_update_ref_any(W, V, P, alpha, 0.7)
+    Vr = ref.maecho_v_update_ref(Wr, V, P, 0.5, True)
+    np.testing.assert_allclose(np.asarray(G), np.asarray(Gr),
+                               atol=1e-2, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(Wn), np.asarray(Wr),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(Vn), np.asarray(Vr),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("convention", ["oi", "io"])
+def test_sharded_backend_aggregate_parity_one_device(convention):
+    """backend="sharded" through maecho_aggregate (mixed tree with a
+    bias on the oracle fallback) matches the oracle."""
+    N = 3
+    clients, projs = [], []
+    for i in range(N):
+        k = jax.random.PRNGKey(11 * i + 3)
+        shape = (256, 140) if convention == "oi" else (140, 256)
+        clients.append({"W": jax.random.normal(k, shape) * 0.3,
+                        "b": jax.random.normal(jax.random.fold_in(k, 1),
+                                               (shape[0],)) * 0.1})
+        U = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(k, 2),
+                                            (140, 16)))[0]
+        s = jax.random.uniform(jax.random.fold_in(k, 3), (16,))
+        projs.append({"W": (U * s) @ U.T, "b": jnp.ones(())})
+    cfg = MAEchoConfig(tau=3, eta=0.5, qp_iters=60)
+    a = maecho_aggregate(clients, projs, cfg, convention=convention,
+                         backend="oracle")
+    b = maecho_aggregate(clients, projs, cfg, convention=convention,
+                         backend="sharded", mesh=_one_device_mesh())
+    np.testing.assert_allclose(np.asarray(a["W"]), np.asarray(b["W"]),
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(a["b"]), np.asarray(b["b"]),
+                               atol=1e-3)
+
+
+def test_exactly_one_psum_per_outer_iteration():
+    """The acceptance contract: a sharded leaf costs ONE (N, N) psum
+    per outer iteration — the gram reconstruction — and the apply
+    phase is collective-free."""
+    mesh = _one_device_mesh()
+    N, tau = 3, 2
+    clients = [{"W": jax.random.normal(jax.random.PRNGKey(i),
+                                       (256, 140)) * 0.3}
+               for i in range(N)]
+    projs = [{"W": jax.random.uniform(jax.random.PRNGKey(50 + i),
+                                      (140,))}
+             for i in range(N)]
+    cfg = MAEchoConfig(tau=tau, eta=0.5, qp_iters=40)
+    txt = str(jax.make_jaxpr(
+        lambda: maecho_aggregate(clients, projs, cfg,
+                                 backend="sharded", mesh=mesh))())
+    assert txt.count("psum") == tau, (
+        f"expected {tau} psums (one per outer iteration), "
+        f"found {txt.count('psum')}")
+
+
+def test_divisibility_fallback_eligibility():
+    """A leaf whose out-dim tiles don't divide the axis is rejected by
+    the eligibility check (8-way fake mesh) and the same model still
+    aggregates cleanly under backend="sharded" (the real-axis psum-free
+    fallback runs in the 8-device subprocess test below)."""
+    mesh = FakeMesh({"data": 8, "model": 1})
+    real = _one_device_mesh()
+    N = 3
+    clients = [{"W": jax.random.normal(jax.random.PRNGKey(i),
+                                       (300, 140)) * 0.3}
+               for i in range(N)]
+    projs = [{"W": jax.random.uniform(jax.random.PRNGKey(9 + i),
+                                      (140,))}
+             for i in range(N)]
+    assert not _use_sharded(clients[0]["W"], jnp.zeros((N, 140)),
+                            "sharded", mesh, "oi", "data")
+    cfg = MAEchoConfig(tau=2, eta=0.5, qp_iters=40)
+    a = maecho_aggregate(clients, projs, cfg, backend="oracle")
+    b = maecho_aggregate(clients, projs, cfg, backend="sharded",
+                         mesh=real)
+    np.testing.assert_allclose(np.asarray(a["W"]), np.asarray(b["W"]),
+                               atol=1e-3)
+
+
+def test_make_debug_mesh_raises_on_shortfall():
+    with pytest.raises(RuntimeError, match=r"needs 4096 devices"):
+        make_debug_mesh(64, 64)
+
+
+def test_agg_partition_specs():
+    """The rules' aggregation placement specs: rows over the data
+    axes with the `_ok` divisibility fallback, QP inputs replicated —
+    congruent with the shard_map layout ops builds inline (W rows on
+    dim 0, V rows on dim 1)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.sharding.rules import make_rules
+
+    rules = make_rules(FakeMesh({"pod": 2, "data": 16, "model": 16}),
+                       get_config("llama3_8b"))
+    assert rules.agg_out_axes(4096) == ("pod", "data")
+    assert rules.agg_out_axes(100) is None
+    assert rules.agg_weight_spec((4096, 1024)) == P(("pod", "data"),
+                                                    None)
+    # non-divisible out / 1-D bias: replicated
+    assert rules.agg_weight_spec((100, 1024)) == P(None, None)
+    assert rules.agg_weight_spec((4096,)) == P(None)
+    assert rules.agg_anchor_spec((8, 4096, 1024)) == P(
+        None, ("pod", "data"), None)
+    assert rules.agg_anchor_spec((8, 4096)) == P(None, None)
+    assert rules.agg_proj_spec((8, 1024, 1024)) == P(None, None, None)
+    assert rules.agg_gram_spec() == P(None, None)
+    assert rules.agg_alpha_spec() == P(None)
+
+
+# --------------------------------------------------------------------------
+# true 8-device runs (fresh process: XLA flag must precede jax init)
+# --------------------------------------------------------------------------
+def _run_forced(code_or_args, n_devices=8):
+    env = {**os.environ,
+           "REPRO_HOST_DEVICES": str(n_devices),
+           "PYTHONPATH": str(REPO / "src") + os.pathsep
+           + os.environ.get("PYTHONPATH", "")}
+    env.pop("XLA_FLAGS", None)
+    if isinstance(code_or_args, str):
+        env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                            f"{n_devices}")
+        args = [sys.executable, "-c", code_or_args]
+    else:
+        args = [sys.executable] + code_or_args
+    return subprocess.run(args, cwd=REPO, env=env,
+                          capture_output=True, text=True, timeout=900)
+
+
+@pytest.mark.slow
+def test_sharded_smoke_4dev():
+    """The smoke CLI at a non-CI axis size (CI's full lane runs the
+    same entry point at 8 devices — 4 here keeps the coverage
+    distinct instead of paying for the identical run twice)."""
+    r = _run_forced(["-m", "repro.launch.dryrun_agg",
+                     "--sharded-smoke", "--smoke-devices", "4"],
+                    n_devices=4)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "[ok] sharded smoke" in r.stdout
+
+
+@pytest.mark.slow
+def test_sharded_parity_kinds_conventions_8dev():
+    """Acceptance: 8-way sharded aggregation matches the single-device
+    oracle to <1e-3 across projector kinds and weight conventions,
+    with exactly one (N, N) psum per outer iteration."""
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.core.maecho import MAEchoConfig, maecho_aggregate
+        assert len(jax.devices()) == 8, jax.devices()
+        mesh = Mesh(np.asarray(jax.devices()), ("data",))
+        N, out_d, in_d, tau = 3, 1024, 256, 2
+        cfg = MAEchoConfig(tau=tau, eta=0.5, qp_iters=40)
+
+        def mk(kind, conv):
+            cs, ps = [], []
+            for i in range(N):
+                k = jax.random.PRNGKey(13 * i + 1)
+                shape = (out_d, in_d) if conv == "oi" else (in_d, out_d)
+                cs.append({"W": jax.random.normal(k, shape) * 0.3})
+                if kind == "scalar":
+                    pw = jnp.ones(())
+                elif kind == "diag":
+                    pw = jax.random.uniform(jax.random.fold_in(k, 2),
+                                            (in_d,))
+                else:
+                    U = jnp.linalg.qr(jax.random.normal(
+                        jax.random.fold_in(k, 2), (in_d, 24)))[0]
+                    s = jax.random.uniform(jax.random.fold_in(k, 3),
+                                           (24,))
+                    pw = ({"U": U, "s": s} if kind == "factored"
+                          else (U * s) @ U.T)
+                ps.append({"W": pw})
+            return cs, ps
+
+        combos = ([(kind, "oi") for kind in
+                   ("scalar", "diag", "full", "factored")]
+                  + [("full", "io"), ("factored", "io")])
+        for kind, conv in combos:
+            cs, ps = mk(kind, conv)
+            a = maecho_aggregate(cs, ps, cfg, convention=conv,
+                                 backend="oracle")
+            b = maecho_aggregate(cs, ps, cfg, convention=conv,
+                                 backend="sharded", mesh=mesh)
+            err = float(jnp.max(jnp.abs(a["W"] - b["W"])))
+            assert err < 1e-3, (kind, conv, err)
+            txt = str(jax.make_jaxpr(
+                lambda cs=cs, ps=ps, conv=conv: maecho_aggregate(
+                    cs, ps, cfg, convention=conv, backend="sharded",
+                    mesh=mesh))())
+            assert txt.count("psum") == tau, (kind, conv,
+                                              txt.count("psum"))
+            print(f"ok {kind}/{conv}: err={err:.2e}")
+        print("ALL_OK")
+    """)
+    r = _run_forced(code)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "ALL_OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_divisibility_fallback_8dev():
+    """out=300 (3 tiles) over 8 devices: no crash, no psum, oracle
+    parity — the clean single-device fallback at real axis size."""
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.core.maecho import MAEchoConfig, maecho_aggregate
+        assert len(jax.devices()) == 8
+        mesh = Mesh(np.asarray(jax.devices()), ("data",))
+        N = 3
+        cs = [{"W": jax.random.normal(jax.random.PRNGKey(i),
+                                      (300, 140)) * 0.3}
+              for i in range(N)]
+        ps = [{"W": jax.random.uniform(jax.random.PRNGKey(9 + i),
+                                       (140,))}
+              for i in range(N)]
+        cfg = MAEchoConfig(tau=2, eta=0.5, qp_iters=40)
+        a = maecho_aggregate(cs, ps, cfg, backend="oracle")
+        b = maecho_aggregate(cs, ps, cfg, backend="sharded", mesh=mesh)
+        err = float(jnp.max(jnp.abs(a["W"] - b["W"])))
+        assert err < 1e-3, err
+        txt = str(jax.make_jaxpr(
+            lambda: maecho_aggregate(cs, ps, cfg, backend="sharded",
+                                     mesh=mesh))())
+        assert txt.count("psum") == 0, txt.count("psum")
+        print("FALLBACK_OK", err)
+    """)
+    r = _run_forced(code)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "FALLBACK_OK" in r.stdout

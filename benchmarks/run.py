@@ -14,8 +14,8 @@ import sys
 import time
 
 from benchmarks import (bench_kernels, bench_maecho_agg, bench_qp_batch,
-                        bench_sharded_agg, fig4_cvae, fig8_mu,
-                        fig9_multiround, roofline_report,
+                        bench_sharded_agg, bench_stacked_agg, fig4_cvae,
+                        fig8_mu, fig9_multiround, roofline_report,
                         table1_multimodel, table4_beta_sweep,
                         table5_local_steps, table6_svd)
 from benchmarks.common import drain_rows, persist_rows
@@ -32,8 +32,23 @@ SUITES = {
     "maecho_agg": bench_maecho_agg.run,
     "qp_batch": bench_qp_batch.run,
     "sharded_agg": bench_sharded_agg.run,
+    "stacked_agg": bench_stacked_agg.run,
     "roofline": roofline_report.run,
 }
+
+# Perf suites whose BENCH_<suite>.json trajectories are gated by
+# tools/check_bench_regression.py: each MUST carry a committed entry in
+# benchmarks/baselines.json (the gate's --check-registered pass fails
+# otherwise — a new perf suite without a baseline would gate nothing).
+# The paper table/figure suites track accuracy, not perf, and are not
+# listed.
+PERF_SUITES = [
+    "kernels",
+    "maecho_agg",
+    "qp_batch",
+    "sharded_agg",
+    "stacked_agg",
+]
 
 
 def main() -> None:

@@ -33,30 +33,36 @@ Backends — the ``backend`` argument of :func:`maecho_aggregate`:
     Rᵢ = (W − Vᵢ)Pᵢ twice (once for the Eq. 6/7 Gram+update, once
     re-projected for Eq. 11) — 2·N·out·in fp32 of HBM traffic per
     layer per iteration that exists only to be contracted away.
-  - ``"kernel"``: the fused streaming pipeline.  Eligible leaves (2-D,
-    unstacked) run three Pallas passes per iteration — ``maecho_gram``
-    (Eq. 6 Gram, residual tiles formed in VMEM and contracted on the
-    fly), ``maecho_update`` (Eq. 7) and ``maecho_v_update`` (Eq. 11)
-    — so no residual tensor is ever resident in HBM.  Factored
-    ``{"U", "s"}`` projectors stay factored through the compute: the
-    (N, out, k) compressed residual replaces the (N, out, in) full
-    one and every GEMM chain drops from O(out·in²) to O(out·in·k).
-    Ineligible leaves (1-D biases, stacked-layer leaves, shapes below
-    one tile) fall back to the oracle — dispatch happens at trace
-    time, the whole τ-loop still jits as one program.
+  - ``"kernel"``: the fused streaming pipeline.  Eligible leaves (2-D
+    weights, with or without leading stacked-layer axes) run three
+    Pallas passes per iteration — ``maecho_gram`` (Eq. 6 Gram,
+    residual tiles formed in VMEM and contracted on the fly),
+    ``maecho_update`` (Eq. 7) and ``maecho_v_update`` (Eq. 11) — so
+    no residual tensor is ever resident in HBM.  A stacked leaf's
+    layer axes are flattened into the kernel grid's outermost
+    dimension (one launch per pass covers all L scanned layers — the
+    ``*_stacked`` kernels); factored ``{"U", "s"}`` projectors stay
+    factored through the compute: the (N, [L,] out, k) compressed
+    residual replaces the full one and every GEMM chain drops from
+    O(out·in²) to O(out·in·k).  Ineligible leaves (1-D biases, shapes
+    below one tile) fall back to the oracle — dispatch happens at
+    trace time, the whole τ-loop still jits as one program, and the
+    fallback is surfaced once via ``ops.fallback_warn``.
   - ``"auto"``: ``"kernel"`` for leaves big enough to tile
-    (min dim ≥ 128), ``"oracle"`` otherwise.
-  - ``"sharded"``: the mesh-sharded pipeline.  Eligible leaves (2-D,
-    unstacked, out-dim tile count divisible by the mesh-axis size —
-    ``ops.sharded_ok``) run the streaming gram/apply under
-    ``shard_map`` over ``MAEchoConfig.mesh_axis``: each device owns an
-    out-row shard, forms only its residual tiles, and ONE ``psum``
-    per leaf per outer iteration reconstructs the (N, N) Gram; the
-    stacked QP solve stays global and the Eq. 7/11 applies run purely
-    on the owned rows (compressed-residual reuse intact).  Ineligible
-    leaves degrade to the single-device ``"auto"`` dispatch.  Pass the
-    mesh via ``maecho_aggregate(..., mesh=...)`` (default: a 1-D mesh
-    over every visible device).
+    (min trailing dim ≥ 128), ``"oracle"`` otherwise.
+  - ``"sharded"``: the mesh-sharded pipeline.  Eligible leaves (2-D
+    weights, stacked or not, out-dim tile count divisible by the
+    mesh-axis size — ``ops.sharded_ok``) run the streaming gram/apply
+    under ``shard_map`` over ``MAEchoConfig.mesh_axis``: each device
+    owns an out-row shard, forms only its residual tiles, and ONE
+    ``psum`` per leaf per outer iteration reconstructs the Gram —
+    (N, N), or the whole (L, N, N) stack for a stacked leaf whose
+    layer axis rides the grid; the stacked QP solve stays global and
+    the Eq. 7/11 applies run purely on the owned rows
+    (compressed-residual reuse intact).  Ineligible leaves degrade to
+    the single-device ``"auto"`` dispatch.  Pass the mesh via
+    ``maecho_aggregate(..., mesh=...)`` (default: a 1-D mesh over
+    every visible device).
 
 Ragged participation (``maecho_aggregate(..., client_mask=...)``): an
 optional per-leaf boolean client mask rides the batched QP's validity
@@ -116,6 +122,13 @@ class MAEchoConfig:
     eps: float = 1e-12
     qp_batched: bool = True       # one stacked PGD solve per outer iter
     mesh_axis: str = "data"       # shard_map axis for backend="sharded"
+    # kernel tile edge for the (non-sharded) streaming pipeline;
+    # 0 = ops.DEFAULT_BLOCK (128, the TPU-safe MXU tile).  Bigger
+    # blocks shrink the grid — the interpret-mode benches use 512 to
+    # amortize per-step interpreter overhead; on TPU stay within VMEM
+    # (the gram rstore is N·bo·bi fp32).  The sharded pipeline keeps
+    # DEFAULT_BLOCK (its out-padding granularity is block × axis_size).
+    kernel_block: int = 0
 
 
 # --------------------------------------------------------------------------
@@ -164,62 +177,122 @@ def _qp_alpha(G, cfg: MAEchoConfig, mask=None):
     return qp_mod.solve_qp(G, cfg.C, iters=cfg.qp_iters, mask=mask)
 
 
-def _kernel_eligible(W, P) -> bool:
-    """Leaf shapes the fused streaming pipeline handles: a 2-D weight
-    with a scalar / diagonal / dense / factored projector."""
-    if getattr(W, "ndim", 0) != 2:
+def _kernel_eligible(W, P, levels: int = 0) -> bool:
+    """Leaf shapes the fused pipelines handle: a 2-D weight (plus
+    ``levels`` leading stacked-layer axes) with a scalar / diagonal /
+    dense / factored projector whose kind axes shift by the same
+    ``levels``."""
+    if getattr(W, "ndim", 0) != 2 + levels:
         return False
     if isinstance(P, dict):
-        return set(P) == {"U", "s"} and P["U"].ndim == 3
-    return P.ndim in (1, 2, 3)
+        return (set(P) == {"U", "s"}
+                and getattr(P["U"], "ndim", 0) == 3 + levels)
+    return getattr(P, "ndim", -1) in (1 + levels, 2 + levels, 3 + levels)
 
 
-def _use_kernel(W, P, backend: str) -> bool:
+def _kernel_dims(W, convention: str) -> tuple:
+    """(out_d, in_d) of a leaf in the "oi"-native kernel layout — the
+    trailing two axes, swapped for "io" (stack axes don't matter)."""
+    out_d, in_d = W.shape[-2:]
+    return (out_d, in_d) if convention == "oi" else (in_d, out_d)
+
+
+def _use_kernel(W, P, backend: str, levels: int = 0) -> bool:
     """Does this leaf take the fused streaming pipeline?  Must agree
     between the gram and apply halves — both recompute it from the
     same static shapes.  ``backend="sharded"`` lands here for leaves
     that failed :func:`_use_sharded` — they take the "auto" rule (the
     single-device kernel path when big enough to tile)."""
-    if backend == "oracle" or not _kernel_eligible(W, P):
+    if backend == "oracle" or not _kernel_eligible(W, P, levels):
         return False
     from repro.kernels.ops import DEFAULT_BLOCK
-    return backend == "kernel" or min(W.shape) >= DEFAULT_BLOCK
+    return backend == "kernel" or min(W.shape[-2:]) >= DEFAULT_BLOCK
 
 
 def _use_sharded(W, P, backend: str, mesh, convention: str,
-                 axis) -> bool:
+                 axis, levels: int = 0) -> bool:
     """Does this leaf take the out-dim mesh-sharded pipeline?  Needs
     ``backend="sharded"``, a mesh that actually carries the configured
-    axis, a kernel-eligible 2-D leaf, and even block-granular
-    divisibility of the (kernel-layout) out-dim over the axis
-    (``ops.sharded_ok`` — the sharding rules' ``_ok`` contract).
-    Anything else falls back through :func:`_use_kernel` to the
-    single-device path.  Static shapes only — the gram and apply
-    halves must agree."""
-    if backend != "sharded" or mesh is None or not _kernel_eligible(W, P):
+    axis, a kernel-eligible leaf (2-D plus ``levels`` stack axes), and
+    even block-granular divisibility of the (kernel-layout) out-dim
+    over the axis (``ops.sharded_ok`` — the sharding rules' ``_ok``
+    contract; it warns once on the fallback).  Anything else falls
+    back through :func:`_use_kernel` to the single-device path.
+    Static shapes only — the gram and apply halves must agree."""
+    if backend != "sharded" or mesh is None \
+            or not _kernel_eligible(W, P, levels):
         return False
     names = (axis,) if isinstance(axis, str) else tuple(axis)
     if any(n not in mesh.shape for n in names):
         return False               # shard_map would KeyError the name
     from repro.kernels import ops
-    out_d, in_d = (W.shape if convention == "oi" else W.shape[::-1])
-    return ops.sharded_ok(out_d, in_d, ops.axis_size_of(mesh, axis))
+    out_d, in_d = _kernel_dims(W, convention)
+    return ops.sharded_ok(out_d, in_d, ops.axis_size_of(mesh, axis),
+                          warn=True)
 
 
-def _to_kernel_layout(W, V, P, convention: str):
+def _stacked_route(W, P, cfg: MAEchoConfig, convention: str,
+                   backend: str, mesh, levels: int):
+    """Compute path of a stacked leaf: ``"sharded"`` | ``"kernel"`` |
+    ``None`` (the vmapped-oracle fallback).  The layer axes fold into
+    the kernel grid, so eligibility is exactly the per-layer rule on
+    the trailing (out, in) dims; an oracle fallback under a non-oracle
+    backend is surfaced once via ``ops.fallback_warn``."""
+    if _use_sharded(W, P, backend, mesh, convention, cfg.mesh_axis,
+                    levels):
+        return "sharded"
+    if _use_kernel(W, P, backend, levels):
+        return "kernel"
+    if backend not in ("oracle", "auto"):
+        # "auto" documents 'oracle otherwise' — only a FORCED fast
+        # path degrading is silent-degradation worth a warning (the
+        # 2-D dispatch draws the same line)
+        from repro.kernels import ops
+        ops.fallback_warn(
+            f"stacked leaf (shape={tuple(W.shape)}, levels={levels}) "
+            f"ineligible for backend={backend!r}: falling back to the "
+            f"vmapped jnp oracle")
+    return None
+
+
+def _flatten_stack(W, V, P, levels: int):
+    """Collapse ``levels`` leading stacked-layer axes into one flat L
+    axis for the stacked kernel grid.  Returns ``(Wf, Vf, Pf, lead)``
+    with Wf (L, out, in), Vf (N, L, out, in), Pf stacked per kind, and
+    ``lead`` the original leading shape for un-flattening."""
+    lead = W.shape[:levels]
+    Wf = W.reshape((-1,) + W.shape[levels:])
+    Vf = V.reshape(V.shape[:1] + (-1,) + V.shape[1 + levels:])
+
+    def flat_p(x):
+        return x.reshape(x.shape[:1] + (-1,) + x.shape[1 + levels:])
+
+    Pf = ({k: flat_p(v) for k, v in P.items()} if isinstance(P, dict)
+          else flat_p(P))
+    return Wf, Vf, Pf, lead
+
+
+def _to_kernel_layout(W, V, P, convention: str, levels: int = 0):
     """The kernel pipelines are "oi"-native; "io" leaves are transposed
     around the call (XLA fuses the transposes into the kernels' operand
     loads).  Shared by the streaming and sharded gram halves — one copy
-    of the layout contract."""
+    of the layout contract; stacked leaves transpose the trailing two
+    axes only."""
     if convention != "io":
         return W, V, P
     # oracle applies delta·P from the left for "io": (PᵢΔ)ᵀ = ΔᵀPᵢᵀ
-    Pk = jnp.swapaxes(P, 1, 2) if (not isinstance(P, dict)
-                                   and P.ndim == 3) else P
-    return W.T, jnp.swapaxes(V, 1, 2), Pk
+    Pk = jnp.swapaxes(P, -1, -2) if (not isinstance(P, dict)
+                                     and P.ndim == 3 + levels) else P
+    return jnp.swapaxes(W, -1, -2), jnp.swapaxes(V, -1, -2), Pk
 
 
-def _leaf_gram_kernel(W, V, P, convention: str):
+def _block_of(cfg: MAEchoConfig) -> int:
+    from repro.kernels.ops import DEFAULT_BLOCK
+
+    return cfg.kernel_block or DEFAULT_BLOCK
+
+
+def _leaf_gram_kernel(W, V, P, cfg: MAEchoConfig, convention: str):
     """Gram half of the fused streaming pipeline: the Eq. 6 Gram plus
     the padded-operand reuse context (padding/kind dispatch and the
     factored-path compressed-residual sharing live in
@@ -227,7 +300,7 @@ def _leaf_gram_kernel(W, V, P, convention: str):
     from repro.kernels import ops
 
     Wk, Vk, Pk = _to_kernel_layout(W, V, P, convention)
-    return ops.maecho_streaming_gram(Wk, Vk, Pk)
+    return ops.maecho_streaming_gram(Wk, Vk, Pk, block=_block_of(cfg))
 
 
 def _leaf_apply_kernel(alpha, ctx, cfg: MAEchoConfig, convention: str):
@@ -237,7 +310,7 @@ def _leaf_apply_kernel(alpha, ctx, cfg: MAEchoConfig, convention: str):
 
     W_new, V_new = ops.maecho_streaming_apply(
         alpha, ctx, eta=cfg.eta, frac=cfg.mu / (1.0 + cfg.mu),
-        norm=cfg.norm, eps=cfg.eps)
+        norm=cfg.norm, eps=cfg.eps, block=_block_of(cfg))
     if convention == "io":
         return W_new.T, jnp.swapaxes(V_new, 1, 2)
     return W_new, V_new
@@ -267,6 +340,50 @@ def _leaf_apply_sharded(alpha, ctx, cfg: MAEchoConfig, convention: str,
     if convention == "io":
         return W_new.T, jnp.swapaxes(V_new, 1, 2)
     return W_new, V_new
+
+
+def _leaf_gram_stacked(W, V, P, cfg: MAEchoConfig, convention: str,
+                       route: str, mesh, levels: int):
+    """Gram half for a stacked leaf on the kernel or sharded pipeline:
+    the ``levels`` leading layer axes are flattened into the kernel
+    grid's outer dimension — ONE launch (and, sharded, ONE psum
+    carrying the (L, N, N) stack) covers every scanned layer.  Returns
+    ``(G, ctx)`` with G carrying the original leading axes before its
+    trailing (N, N), matching the oracle-vmap layout."""
+    from repro.kernels import ops
+
+    Wf, Vf, Pf, lead = _flatten_stack(W, V, P, levels)
+    Wk, Vk, Pk = _to_kernel_layout(Wf, Vf, Pf, convention, levels=1)
+    if route == "sharded":
+        G, ctx = ops.maecho_sharded_gram_stacked(Wk, Vk, Pk, mesh=mesh,
+                                                 axis=cfg.mesh_axis)
+    else:
+        G, ctx = ops.maecho_streaming_gram_stacked(
+            Wk, Vk, Pk, block=_block_of(cfg))
+    return G.reshape(lead + G.shape[-2:]), ("stk", route, lead, ctx)
+
+
+def _leaf_apply_stacked(alpha, ctx, cfg: MAEchoConfig,
+                        convention: str, mesh):
+    """Update half for a stacked leaf: per-layer Eq. 7 + Eq. 11 from
+    the flattened-grid context.  ``alpha`` carries the leaf's leading
+    stack axes before its trailing N (the QP batch layout)."""
+    from repro.kernels import ops
+
+    _, route, lead, inner = ctx
+    af = alpha.reshape((-1,) + alpha.shape[-1:])
+    kw = dict(eta=cfg.eta, frac=cfg.mu / (1.0 + cfg.mu), norm=cfg.norm,
+              eps=cfg.eps)
+    if route == "sharded":
+        Wn, Vn = ops.maecho_sharded_apply_stacked(
+            af, inner, mesh=mesh, axis=cfg.mesh_axis, **kw)
+    else:
+        Wn, Vn = ops.maecho_streaming_apply_stacked(
+            af, inner, block=_block_of(cfg), **kw)
+    if convention == "io":
+        Wn, Vn = jnp.swapaxes(Wn, -1, -2), jnp.swapaxes(Vn, -1, -2)
+    return (Wn.reshape(lead + Wn.shape[-2:]),
+            Vn.reshape(Vn.shape[:1] + lead + Vn.shape[-2:]))
 
 
 def _leaf_gram_oracle(W, V, P, convention: str):
@@ -316,7 +433,7 @@ def _leaf_step(W, V, P, cfg: MAEchoConfig, convention: str,
         return _leaf_apply_sharded(_qp_alpha(G, cfg, mask), ctx, cfg,
                                    convention, mesh)
     if _use_kernel(W, P, backend):
-        G, ctx = _leaf_gram_kernel(W, V, P, convention)
+        G, ctx = _leaf_gram_kernel(W, V, P, cfg, convention)
         return _leaf_apply_kernel(_qp_alpha(G, cfg, mask), ctx, cfg,
                                   convention)
     G, R = _leaf_gram_oracle(W, V, P, convention)
@@ -327,12 +444,23 @@ def _leaf_step(W, V, P, cfg: MAEchoConfig, convention: str,
 def _dispatch_leaf(W, V, P, cfg: MAEchoConfig, convention: str,
                    levels: int = 0, backend: str = "oracle", mesh=None,
                    mask=None):
-    """``levels`` leading stacked-layer axes are vmapped away; the QP is
-    then solved per scanned layer, matching the paper's per-layer loop.
-    Stacked leaves stay on the oracle (Pallas under vmap is an open
-    item — ROADMAP); the participation mask is shared by every scanned
-    layer of a leaf."""
+    """``levels`` leading stacked-layer axes fold into the kernel grid
+    when the leaf is pipeline-eligible (one launch covers all scanned
+    layers) and are vmapped over the oracle otherwise; either way the
+    QP is solved per scanned layer, matching the paper's per-layer
+    loop.  The participation mask is shared by every scanned layer of
+    a leaf."""
     if levels > 0:
+        route = _stacked_route(W, P, cfg, convention, backend, mesh,
+                               levels)
+        if route is not None:
+            G, ctx = _leaf_gram_stacked(W, V, P, cfg, convention,
+                                        route, mesh, levels)
+            Gf = G.reshape((-1,) + G.shape[-2:])
+            alpha = jax.vmap(lambda g: _qp_alpha(g, cfg, mask))(Gf)
+            alpha = alpha.reshape(G.shape[:-2] + alpha.shape[-1:])
+            return _leaf_apply_stacked(alpha, ctx, cfg, convention,
+                                       mesh)
         # V/P: (N, L, ...) -> vmap over L (axis 1 of V/P, axis 0 of W)
         return jax.vmap(
             lambda w, v, p: _dispatch_leaf(w, v, p, cfg, convention,
@@ -353,10 +481,17 @@ def _leaf_gram(W, V, P, cfg: MAEchoConfig, convention: str,
     its trailing (N, N) — the caller flattens those into the QP batch
     axis — and ``ctx`` is the per-leaf reuse payload for
     :func:`_leaf_apply` (the oracle residual, or the kernel/sharded
-    pipeline's padded-operand context).  Stacked leaves vmap the
-    oracle gram, so a leaf with L scanned layers contributes L rows to
-    the batch."""
+    pipeline's padded-operand context).  An eligible stacked leaf
+    folds its layer axes into the kernel grid (one launch, and on the
+    sharded route one (L, N, N) psum, for all L scanned layers);
+    ineligible ones vmap the oracle gram.  Either way a leaf with L
+    scanned layers contributes L rows to the batch."""
     if levels > 0:
+        route = _stacked_route(W, P, cfg, convention, backend, mesh,
+                               levels)
+        if route is not None:
+            return _leaf_gram_stacked(W, V, P, cfg, convention, route,
+                                      mesh, levels)
         return jax.vmap(
             lambda w, v, p: _leaf_gram(w, v, p, cfg, convention,
                                        levels - 1, "oracle"),
@@ -364,7 +499,7 @@ def _leaf_gram(W, V, P, cfg: MAEchoConfig, convention: str,
     if _use_sharded(W, P, backend, mesh, convention, cfg.mesh_axis):
         return _leaf_gram_sharded(W, V, P, cfg, convention, mesh)
     if _use_kernel(W, P, backend):
-        return _leaf_gram_kernel(W, V, P, convention)
+        return _leaf_gram_kernel(W, V, P, cfg, convention)
     return _leaf_gram_oracle(W, V, P, convention)
 
 
@@ -376,6 +511,9 @@ def _leaf_apply(W, V, P, ctx, alpha, cfg: MAEchoConfig,
     carries the leaf's stacked-layer axes in front of its trailing N,
     mirroring the gram layout."""
     if levels > 0:
+        if isinstance(ctx, tuple) and len(ctx) == 4 and ctx[0] == "stk":
+            return _leaf_apply_stacked(alpha, ctx, cfg, convention,
+                                       mesh)
         return jax.vmap(
             lambda w, v, p, r, a: _leaf_apply(w, v, p, r, a, cfg,
                                               convention, levels - 1,
@@ -495,6 +633,53 @@ def _maecho_jit(W0, V0, P, cfg: MAEchoConfig, convention: str,
     return W, V
 
 
+def dispatch_summary(W0: Pytree, P: Pytree, levels_tree: Pytree,
+                     cfg: MAEchoConfig = MAEchoConfig(),
+                     convention: str = "oi", backend: str = "oracle",
+                     mesh=None):
+    """Per-leaf compute-path report: which backend each leaf actually
+    takes under the given dispatch inputs — the visibility companion
+    to ``ops.fallback_warn`` (a requested fast path silently degrading
+    to the oracle is the failure mode both guard).
+
+    ``W0`` / ``P`` are the global-weight and *stacked* (leading client
+    axis) projector trees — arrays or ``jax.ShapeDtypeStruct``s both
+    work, dispatch is static-shape-only.  Returns ``(per_leaf,
+    counts)``: ``per_leaf`` is a list of ``(path, levels, route)``
+    with route in {"oracle", "kernel", "sharded"}; ``counts`` maps
+    route -> leaf count.
+    """
+    treedef = jax.tree_util.tree_structure(W0)
+    paths = [p for p, _ in trees.tree_paths(W0)]
+    flatW = jax.tree_util.tree_leaves(W0)
+    flatP = treedef.flatten_up_to(P)
+    flatL = jax.tree_util.tree_leaves(levels_tree)
+    from repro.kernels.ops import DEFAULT_BLOCK
+
+    per_leaf = []
+    for path, w, p, lv in zip(paths, flatW, flatP, flatL):
+        if lv > 0:
+            route = _stacked_route(w, p, cfg, convention, backend,
+                                   mesh, lv) or "oracle"
+        elif _use_sharded(w, p, backend, mesh, convention,
+                          cfg.mesh_axis):
+            route = "sharded"
+        elif _use_kernel(w, p, backend):
+            route = "kernel"
+        else:
+            route = "oracle"
+        # a "kernel"-routed leaf below one tile runs the jnp oracle
+        # inside the streaming wrappers (backend="kernel" forces the
+        # route, not the tiling) — report what actually executes
+        if route == "kernel" and min(w.shape[-2:]) < DEFAULT_BLOCK:
+            route = "oracle"
+        per_leaf.append((path, lv, route))
+    counts: dict = {}
+    for _, _, route in per_leaf:
+        counts[route] = counts.get(route, 0) + 1
+    return per_leaf, counts
+
+
 def _default_mesh(axis_name: str):
     """1-D mesh over every visible device — the ``backend="sharded"``
     convenience default, so ``maecho_backend="sharded"`` works without
@@ -558,6 +743,10 @@ def maecho_aggregate(
                     ``None`` (all 0, the paper's MLP/CNN layout), a
                     pytree of ints matching the weights, or a callable
                     ``path -> int`` (the LLM scan-over-layers layout).
+                    Stacked leaves are first-class on every backend:
+                    eligible ones fold their (flattened) layer axis
+                    into the kernel grid; projector leaves must carry
+                    the same leading axes.
     backend:        ``"oracle"`` | ``"kernel"`` | ``"auto"`` |
                     ``"sharded"`` — the jnp reference path, the fused
                     streaming Pallas pipeline, or its out-dim
@@ -596,6 +785,39 @@ def maecho_aggregate(
     levels = tuple(jax.tree_util.tree_leaves(levels_tree))
     V0 = trees.tree_map(lambda *xs: jnp.stack(xs, 0), *client_weights)
     P = trees.tree_map(lambda *xs: jnp.stack(xs, 0), *projections)
-    W, V = _maecho_jit(W0, V0, P, cfg, convention, levels, backend,
+    # Multi-level stacks collapse to ONE flat scan axis before dispatch
+    # (pure reshape — the QP treats every scanned layer independently,
+    # so per-layer semantics are unchanged): the stacked kernel grid
+    # wants a single layer axis, and nested vmaps over the oracle both
+    # cost an extra batch dim and trip XLA:CPU's simplifier on dense
+    # projector contractions.  Outputs are reshaped back below.
+    treedef = jax.tree_util.tree_structure(W0)
+    multi = any(lv > 1 for lv in levels)
+    if multi:
+        leads = tuple(w.shape[:lv] for w, lv in
+                      zip(jax.tree_util.tree_leaves(W0), levels))
+        fW, fV, fP = [], [], []
+        for w, v, p, lv in zip(jax.tree_util.tree_leaves(W0),
+                               treedef.flatten_up_to(V0),
+                               treedef.flatten_up_to(P), levels):
+            if lv > 1:
+                w, v, p, _ = _flatten_stack(w, v, p, lv)
+            fW.append(w)
+            fV.append(v)
+            fP.append(p)
+        W0 = jax.tree_util.tree_unflatten(treedef, fW)
+        V0 = jax.tree_util.tree_unflatten(treedef, fV)
+        P = jax.tree_util.tree_unflatten(treedef, fP)
+    run_levels = tuple(min(lv, 1) for lv in levels) if multi else levels
+    W, V = _maecho_jit(W0, V0, P, cfg, convention, run_levels, backend,
                        mesh, masks)
+    if multi:
+        W = jax.tree_util.tree_unflatten(treedef, [
+            w.reshape(lead + w.shape[1:]) if lv > 1 else w
+            for w, lead, lv in zip(jax.tree_util.tree_leaves(W),
+                                   leads, levels)])
+        V = jax.tree_util.tree_unflatten(treedef, [
+            v.reshape(v.shape[:1] + lead + v.shape[2:]) if lv > 1 else v
+            for v, lead, lv in zip(treedef.flatten_up_to(V),
+                                   leads, levels)])
     return (W, V) if return_anchors else W

@@ -355,11 +355,21 @@ def _probe_encdec(cfg: ModelConfig, params, batches):
 # --------------------------------------------------------------------------
 def aggregate_llm(cfg: ModelConfig, client_params: list,
                   client_projs: list = None,
-                  macfg: MAEchoConfig = MAEchoConfig(tau=20, eta=0.5)):
-    """One-shot MA-Echo over fine-tuned LLM checkpoints."""
+                  macfg: MAEchoConfig = MAEchoConfig(tau=20, eta=0.5),
+                  backend: str = "auto", mesh=None):
+    """One-shot MA-Echo over fine-tuned LLM checkpoints.
+
+    ``backend="auto"`` (default) promotes every leaf big enough to
+    tile — including the scan-over-layers transformer stacks, whose
+    layer axis folds into the stacked kernel grid — to the fused
+    Pallas pipeline; smoke-scale models (dims below one 128-tile)
+    degrade to the oracle with identical results.  Pass
+    ``backend="sharded"`` plus a ``mesh`` to additionally split leaf
+    out-rows across devices (one psum per leaf per outer iteration).
+    """
     if client_projs is None:
         client_projs = [default_llm_projections(cfg, p)
                         for p in client_params]
     return maecho_aggregate(
         client_params, client_projs, macfg, convention="io",
-        stack_levels=stack_levels_fn(cfg))
+        stack_levels=stack_levels_fn(cfg), backend=backend, mesh=mesh)

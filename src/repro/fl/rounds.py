@@ -15,7 +15,10 @@ serialises over leaves.  ``MultiRoundConfig.maecho_backend`` selects
 the per-leaf compute path (``"oracle"`` | ``"kernel"`` | ``"auto"`` |
 ``"sharded"``, see ``core.maecho``); for ``"sharded"`` pass the mesh
 through ``run_multi_round(..., mesh=...)`` (default: a 1-D mesh over
-every visible device).
+every visible device).  Scan-over-layers models (leaves with leading
+stacked-layer axes) ride the same fast paths: pass their per-leaf
+axis counts via ``run_multi_round(..., stack_levels=...)`` and the
+layer axis folds into the kernel grid instead of forcing the oracle.
 """
 from __future__ import annotations
 
@@ -58,12 +61,16 @@ def run_multi_round(
     global_init=None,
     on_round: Optional[Callable] = None,
     mesh=None,
+    stack_levels=None,
 ) -> tuple[list, float]:
     """Returns (per-round global accuracies, final accuracy).
 
     ``mesh`` is threaded into the aggregation call for
     ``maecho_backend="sharded"`` (``core.maecho`` builds a default
-    1-D all-devices mesh when it is None)."""
+    1-D all-devices mesh when it is None); ``stack_levels`` is the
+    per-leaf stacked-layer-axis count passed straight through to
+    ``maecho_aggregate`` for scan-over-layers models (the paper
+    MLP/CNN specs are flat — leave it None there)."""
     rng = np.random.RandomState(cfg.seed)
     params = (global_init if global_init is not None
               else pm.init(spec, jax.random.PRNGKey(cfg.seed)))
@@ -91,7 +98,7 @@ def run_multi_round(
             fprojs = [_flatten_proj(pr) for pr in projs]
             new = maecho_aggregate(flat, fprojs, cfg.maecho,
                                    backend=cfg.maecho_backend,
-                                   mesh=mesh)
+                                   mesh=mesh, stack_levels=stack_levels)
         else:
             from repro.core.aggregators import fedavg
             new = fedavg(flat)

@@ -31,6 +31,14 @@ Variants (all share the accumulate/finalize tail):
 VMEM budget: rstore is N·bo·bi fp32 — with the default 128×128 blocks
 that caps N around 40 per core (the paper runs N ≤ 50; shrink ``bo``
 for larger cohorts).
+
+Stacked-layer variants (``maecho_gram_stacked`` /
+``maecho_gram_left_stacked`` / ``maecho_gram_diag_stacked``): the
+scan-over-layers axis L is folded into the grid as the outermost
+dimension — grid (L, n_out, n_in, N, n_k), per-layer (N, N) output
+block, same VMEM scratch reused across layers — so ONE launch covers
+every scanned layer of a stacked leaf (the LLM transformer-stack
+layout) instead of L oracle fallbacks.
 """
 from __future__ import annotations
 
@@ -43,14 +51,19 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _gram_tail(resid, out_ref, racc_ref, rstore_ref, gacc_ref,
-               n_clients: int, n_k: int):
+               n_clients: int, n_k: int, off: int = 0):
     """Shared accumulate/park/contract/finalize logic.
 
     ``resid`` is this (client, k-block)'s partial-residual contribution
     (bo, bi) in fp32; callers form it from their own operands.
+    ``off`` is the grid offset of the (out, in, client, k) axes: 0 for
+    the per-layer grid, 1 when a stacked-layer axis rides in front —
+    the accumulators then re-initialize at the start of every layer
+    (the (o, j, i, k) == 0 condition fires once per outer-grid step)
+    and the finalize writes that layer's (N, N) output block.
     """
-    o, j, i, k = (pl.program_id(t) for t in range(4))
-    n_out, n_in = pl.num_programs(0), pl.num_programs(1)
+    o, j, i, k = (pl.program_id(off + t) for t in range(4))
+    n_out, n_in = pl.num_programs(off), pl.num_programs(off + 1)
 
     @pl.when((o == 0) & (j == 0) & (i == 0) & (k == 0))
     def _init_gram():
@@ -81,23 +94,23 @@ def _gram_tail(resid, out_ref, racc_ref, rstore_ref, gacc_ref,
 
 def _gram_kernel_dense(w_ref, v_ref, p_ref, out_ref,
                        racc_ref, rstore_ref, gacc_ref,
-                       *, n_clients: int, n_k: int):
+                       *, n_clients: int, n_k: int, off: int = 0):
     resid = jax.lax.dot((w_ref[...] - v_ref[...]).astype(jnp.float32),
                         p_ref[...].astype(jnp.float32),
                         preferred_element_type=jnp.float32)
     _gram_tail(resid, out_ref, racc_ref, rstore_ref, gacc_ref,
-               n_clients, n_k)
+               n_clients, n_k, off)
 
 
 def _gram_kernel_left(a_ref, ut_ref, out_ref,
                       racc_ref, rstore_ref, gacc_ref,
-                      *, n_clients: int, n_k: int):
+                      *, n_clients: int, n_k: int, off: int = 0):
     """Residual given as a left factor: Rᵢ = Aᵢ @ (right)ᵢ."""
     resid = jax.lax.dot(a_ref[...].astype(jnp.float32),
                         ut_ref[...].astype(jnp.float32),
                         preferred_element_type=jnp.float32)
     _gram_tail(resid, out_ref, racc_ref, rstore_ref, gacc_ref,
-               n_clients, n_k)
+               n_clients, n_k, off)
 
 
 @functools.partial(jax.jit, static_argnames=("bo", "bi", "bk",
@@ -133,17 +146,20 @@ def maecho_gram(W, V, P, *, bo: int = 128, bi: int = 128, bk: int = 128,
 
 
 def compressed_residual(W, V, U, s):
-    """Aᵢ = ((W − Vᵢ)Uᵢ)·diag(sᵢ): the (N, out, k) compressed residual.
+    """Aᵢ = ((W − Vᵢ)Uᵢ)·diag(sᵢ): the (N, …, out, k) compressed
+    residual.
 
-    Formed as W@Uᵢ − Vᵢ@Uᵢ so the (N, out, in) full residual is never
-    materialized — only its rank-k image, which IS the factored-path
-    working set.
+    Formed as W@Uᵢ − Vᵢ@Uᵢ so the (N, …, out, in) full residual is
+    never materialized — only its rank-k image, which IS the
+    factored-path working set.  Any stacked-layer axes ride the
+    ellipsis: W (…, out, in), V (N, …, out, in), U (N, …, in, k),
+    s (N, …, k).
     """
-    A = (jnp.einsum("oi,nik->nok", W.astype(jnp.float32),
+    A = (jnp.einsum("...oi,n...ik->n...ok", W.astype(jnp.float32),
                     U.astype(jnp.float32))
-         - jnp.einsum("noi,nik->nok", V.astype(jnp.float32),
+         - jnp.einsum("n...oi,n...ik->n...ok", V.astype(jnp.float32),
                       U.astype(jnp.float32)))
-    return A * s[:, None, :].astype(jnp.float32)
+    return A * s[..., None, :].astype(jnp.float32)
 
 
 def maecho_gram_factored(W, V, U, s, *, bo: int = 128, bi: int = 128,
@@ -192,9 +208,9 @@ def maecho_gram_left(A, UT, *, bo: int = 128, bi: int = 128,
 
 
 def _gram_diag_kernel(w_ref, v_ref, p_ref, out_ref, gacc_ref,
-                      *, n_clients: int):
-    o, j = pl.program_id(0), pl.program_id(1)
-    n_out, n_in = pl.num_programs(0), pl.num_programs(1)
+                      *, n_clients: int, off: int = 0):
+    o, j = pl.program_id(off), pl.program_id(off + 1)
+    n_out, n_in = pl.num_programs(off), pl.num_programs(off + 1)
 
     @pl.when((o == 0) & (j == 0))
     def _init():
@@ -211,6 +227,115 @@ def _gram_diag_kernel(w_ref, v_ref, p_ref, out_ref, gacc_ref,
     @pl.when((o == n_out - 1) & (j == n_in - 1))
     def _finalize():
         out_ref[...] = gacc_ref[...].astype(out_ref.dtype)
+
+
+# --------------------------------------------------------------------------
+# stacked-layer variants: the scan-layer axis L rides the grid in front,
+# one launch per leaf covers all L layers (per-layer (N, N) output block,
+# per-layer accumulator re-init — see _gram_tail's ``off``)
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("bo", "bi", "bk",
+                                             "interpret"))
+def maecho_gram_stacked(W, V, P, *, bo: int = 128, bi: int = 128,
+                        bk: int = 128, interpret: bool = True):
+    """W: (L, out, in); V: (N, L, out, in); P: (N, L, in, in) dense.
+
+    Returns the fp32 (L, N, N) per-layer Gram stack from ONE launch:
+    grid (L, n_out, n_in, N, n_k) with the layer axis outermost, so
+    the VMEM scratch (one layer's tile accumulators) is reused across
+    layers instead of replicated."""
+    L, out_d, in_d = W.shape
+    N = V.shape[0]
+    bo, bi, bk = min(bo, out_d), min(bi, in_d), min(bk, in_d)
+    assert out_d % bo == 0 and in_d % bi == 0 and in_d % bk == 0, (
+        "pad layer dims to block multiples (ops stacked wrappers)")
+    n_out, n_in, n_k = out_d // bo, in_d // bi, in_d // bk
+    kernel = functools.partial(_gram_kernel_dense, n_clients=N, n_k=n_k,
+                               off=1)
+    return pl.pallas_call(
+        kernel,
+        grid=(L, n_out, n_in, N, n_k),
+        in_specs=[
+            pl.BlockSpec((None, bo, bk),
+                         lambda l, o, j, i, k: (l, o, k)),             # W
+            pl.BlockSpec((None, None, bo, bk),
+                         lambda l, o, j, i, k: (i, l, o, k)),          # V
+            pl.BlockSpec((None, None, bk, bi),
+                         lambda l, o, j, i, k: (i, l, k, j)),          # P
+        ],
+        out_specs=pl.BlockSpec((None, N, N),
+                               lambda l, o, j, i, k: (l, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, N, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bo, bi), jnp.float32),
+                        pltpu.VMEM((N, bo, bi), jnp.float32),
+                        pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(W, V, P)
+
+
+@functools.partial(jax.jit, static_argnames=("bo", "bi", "bk",
+                                             "interpret"))
+def maecho_gram_left_stacked(A, UT, *, bo: int = 128, bi: int = 128,
+                             bk: int = 128, interpret: bool = True):
+    """Stacked Gram from pre-factored residuals Rₗᵢ = Aₗᵢ @ UTₗᵢ.
+
+    A: (N, L, out, k) compressed residual; UT: (N, L, k, in).
+    Returns (L, N, N); the compressed residual is shared with the
+    stacked Eq. 7 kernel exactly like the per-layer path."""
+    N, L, out_d, kd = A.shape
+    in_d = UT.shape[3]
+    bo, bi, bk = min(bo, out_d), min(bi, in_d), min(bk, kd)
+    assert out_d % bo == 0 and in_d % bi == 0 and kd % bk == 0, (
+        "pad layer dims / rank to block multiples")
+    n_out, n_in, n_k = out_d // bo, in_d // bi, kd // bk
+    kernel = functools.partial(_gram_kernel_left, n_clients=N, n_k=n_k,
+                               off=1)
+    return pl.pallas_call(
+        kernel,
+        grid=(L, n_out, n_in, N, n_k),
+        in_specs=[
+            pl.BlockSpec((None, None, bo, bk),
+                         lambda l, o, j, i, k: (i, l, o, k)),          # A
+            pl.BlockSpec((None, None, bk, bi),
+                         lambda l, o, j, i, k: (i, l, k, j)),          # Uᵀ
+        ],
+        out_specs=pl.BlockSpec((None, N, N),
+                               lambda l, o, j, i, k: (l, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, N, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bo, bi), jnp.float32),
+                        pltpu.VMEM((N, bo, bi), jnp.float32),
+                        pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(A, UT)
+
+
+@functools.partial(jax.jit, static_argnames=("bo", "bi", "interpret"))
+def maecho_gram_diag_stacked(W, V, p, *, bo: int = 128, bi: int = 128,
+                             interpret: bool = True):
+    """Stacked diagonal projectors.  W: (L, out, in);
+    V: (N, L, out, in); p: (N, L, in).  Returns (L, N, N)."""
+    L, out_d, in_d = W.shape
+    N = V.shape[0]
+    bo, bi = min(bo, out_d), min(bi, in_d)
+    assert out_d % bo == 0 and in_d % bi == 0, (
+        "pad layer dims to block multiples")
+    p4 = p.reshape(N, L, 1, in_d)
+    kernel = functools.partial(_gram_diag_kernel, n_clients=N, off=1)
+    return pl.pallas_call(
+        kernel,
+        grid=(L, out_d // bo, in_d // bi),
+        in_specs=[
+            pl.BlockSpec((None, bo, bi), lambda l, o, j: (l, o, j)),   # W
+            pl.BlockSpec((N, None, bo, bi),
+                         lambda l, o, j: (0, l, o, j)),                # V
+            pl.BlockSpec((N, None, 1, bi),
+                         lambda l, o, j: (0, l, 0, j)),                # p
+        ],
+        out_specs=pl.BlockSpec((None, N, N), lambda l, o, j: (l, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, N, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(W, V, p4)
 
 
 @functools.partial(jax.jit, static_argnames=("bo", "bi", "interpret"))

@@ -32,15 +32,16 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(alpha_ref, w_ref, v_ref, p_ref, wout_ref, out_ref, acc_ref,
-            *, eta: float, n_clients: int, n_k: int):
-    i = pl.program_id(2)          # client index
-    k = pl.program_id(3)          # reduction block index
+            *, eta: float, n_clients: int, n_k: int, off: int = 0):
+    i = pl.program_id(off + 2)    # client index
+    k = pl.program_id(off + 3)    # reduction block index
 
     @pl.when((i == 0) & (k == 0))
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a_i = alpha_ref[i]
+    # stacked grids carry the layer axis in front: α is (L, N) in SMEM
+    a_i = alpha_ref[pl.program_id(0), i] if off else alpha_ref[i]
     resid = (w_ref[...] - v_ref[...]).astype(jnp.float32)    # (bo, bk)
     pblk = p_ref[...].astype(jnp.float32)                    # (bk, bi)
     acc_ref[...] += -2.0 * a_i * jax.lax.dot(
@@ -90,16 +91,16 @@ def maecho_update(W, V, P, alpha, *, eta: float = 1.0, bo: int = 128,
 
 
 def _left_kernel(alpha_ref, a_ref, ut_ref, wout_ref, out_ref, acc_ref,
-                 *, eta: float, n_clients: int, n_k: int):
+                 *, eta: float, n_clients: int, n_k: int, off: int = 0):
     """Residual given as a left factor: (W − Vᵢ)Pᵢ = Aᵢ @ Uᵢᵀ."""
-    i = pl.program_id(2)
-    k = pl.program_id(3)
+    i = pl.program_id(off + 2)
+    k = pl.program_id(off + 3)
 
     @pl.when((i == 0) & (k == 0))
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a_i = alpha_ref[i]
+    a_i = alpha_ref[pl.program_id(0), i] if off else alpha_ref[i]
     acc_ref[...] += -2.0 * a_i * jax.lax.dot(
         a_ref[...].astype(jnp.float32), ut_ref[...].astype(jnp.float32),
         preferred_element_type=jnp.float32)
@@ -151,6 +152,119 @@ def maecho_update_left(W, A, UT, alpha, *, eta: float = 1.0,
         scratch_shapes=[pltpu.VMEM((bo, bi), jnp.float32)],
         interpret=interpret,
     )(alpha, A, UT, W)
+
+
+# --------------------------------------------------------------------------
+# stacked-layer variants: the scan-layer axis L rides the grid outermost,
+# α is the per-layer (L, N) stack, one launch covers the whole leaf
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("eta", "bo", "bi", "bk",
+                                             "interpret"))
+def maecho_update_stacked(W, V, P, alpha, *, eta: float = 1.0,
+                          bo: int = 128, bi: int = 128, bk: int = 128,
+                          interpret: bool = True):
+    """W: (L, out, in); V: (N, L, out, in); P: (N, L, in, in);
+    alpha: (L, N).  Returns the (L, out, in) Eq. 7 update from one
+    launch — grid (L, n_out, n_in, N, n_k), layer axis outermost."""
+    L, out_d, in_d = W.shape
+    N = V.shape[0]
+    bo, bi, bk = min(bo, out_d), min(bi, in_d), min(bk, in_d)
+    assert out_d % bo == 0 and in_d % bi == 0 and in_d % bk == 0, (
+        "pad layer dims to block multiples")
+    n_out, n_in, n_k = out_d // bo, in_d // bi, in_d // bk
+    kernel = functools.partial(_kernel, eta=eta, n_clients=N, n_k=n_k,
+                               off=1)
+    return pl.pallas_call(
+        kernel,
+        grid=(L, n_out, n_in, N, n_k),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # alpha
+            pl.BlockSpec((None, bo, bk),
+                         lambda l, o, j, i, k: (l, o, k)),          # W (res)
+            pl.BlockSpec((None, None, bo, bk),
+                         lambda l, o, j, i, k: (i, l, o, k)),       # V
+            pl.BlockSpec((None, None, bk, bi),
+                         lambda l, o, j, i, k: (i, l, k, j)),       # P
+            pl.BlockSpec((None, bo, bi),
+                         lambda l, o, j, i, k: (l, o, j)),          # W (out)
+        ],
+        out_specs=pl.BlockSpec((None, bo, bi),
+                               lambda l, o, j, i, k: (l, o, j)),
+        out_shape=jax.ShapeDtypeStruct((L, out_d, in_d), W.dtype),
+        scratch_shapes=[pltpu.VMEM((bo, bi), jnp.float32)],
+        interpret=interpret,
+    )(alpha, W, V, P, W)
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "bo", "bi", "bk",
+                                             "interpret"))
+def maecho_update_left_stacked(W, A, UT, alpha, *, eta: float = 1.0,
+                               bo: int = 128, bi: int = 128,
+                               bk: int = 128, interpret: bool = True):
+    """Stacked Eq. 7 from pre-factored residuals Rₗᵢ = Aₗᵢ @ UTₗᵢ
+    (A shared with ``maecho_gram_left_stacked`` — one
+    ``compressed_residual`` per leaf per iteration).
+    W: (L, out, in); A: (N, L, out, k); UT: (N, L, k, in);
+    alpha: (L, N)."""
+    L, out_d, in_d = W.shape
+    N, _, _, kd = A.shape
+    bo, bi, bk = min(bo, out_d), min(bi, in_d), min(bk, kd)
+    assert out_d % bo == 0 and in_d % bi == 0 and kd % bk == 0, (
+        "pad layer dims / rank to block multiples")
+    n_out, n_in, n_k = out_d // bo, in_d // bi, kd // bk
+    kernel = functools.partial(_left_kernel, eta=eta, n_clients=N,
+                               n_k=n_k, off=1)
+    return pl.pallas_call(
+        kernel,
+        grid=(L, n_out, n_in, N, n_k),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # alpha
+            pl.BlockSpec((None, None, bo, bk),
+                         lambda l, o, j, i, k: (i, l, o, k)),       # A
+            pl.BlockSpec((None, None, bk, bi),
+                         lambda l, o, j, i, k: (i, l, k, j)),       # Uᵀ
+            pl.BlockSpec((None, bo, bi),
+                         lambda l, o, j, i, k: (l, o, j)),          # W (out)
+        ],
+        out_specs=pl.BlockSpec((None, bo, bi),
+                               lambda l, o, j, i, k: (l, o, j)),
+        out_shape=jax.ShapeDtypeStruct((L, out_d, in_d), W.dtype),
+        scratch_shapes=[pltpu.VMEM((bo, bi), jnp.float32)],
+        interpret=interpret,
+    )(alpha, A, UT, W)
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "bo", "bi",
+                                             "interpret"))
+def maecho_update_diag_stacked(W, V, p, alpha, *, eta: float = 1.0,
+                               bo: int = 128, bi: int = 128,
+                               interpret: bool = True):
+    """Stacked diagonal projectors.  W: (L, out, in);
+    V: (N, L, out, in); p: (N, L, in); alpha: (L, N)."""
+    L, out_d, in_d = W.shape
+    N = V.shape[0]
+    bo, bi = min(bo, out_d), min(bi, in_d)
+    assert out_d % bo == 0 and in_d % bi == 0, (
+        "pad layer dims to block multiples")
+    p4 = p.reshape(N, L, 1, in_d)
+    a4 = alpha.T.reshape(N, L, 1, 1).astype(jnp.float32)
+    kernel = functools.partial(_diag_kernel, eta=eta)
+    return pl.pallas_call(
+        kernel,
+        grid=(L, out_d // bo, in_d // bi),
+        in_specs=[
+            pl.BlockSpec((None, bo, bi), lambda l, o, j: (l, o, j)),   # W
+            pl.BlockSpec((N, None, bo, bi),
+                         lambda l, o, j: (0, l, o, j)),                # V
+            pl.BlockSpec((N, None, 1, bi),
+                         lambda l, o, j: (0, l, 0, j)),                # p
+            pl.BlockSpec((N, None, 1, 1),
+                         lambda l, o, j: (0, l, 0, 0)),                # alpha
+        ],
+        out_specs=pl.BlockSpec((None, bo, bi), lambda l, o, j: (l, o, j)),
+        out_shape=jax.ShapeDtypeStruct((L, out_d, in_d), W.dtype),
+        interpret=interpret,
+    )(W, V, p4, a4)
 
 
 def _diag_kernel(w_ref, v_ref, p_ref, alpha_ref, out_ref, *, eta: float):

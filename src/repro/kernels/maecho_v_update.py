@@ -41,9 +41,13 @@ def _apply_norm(u, eps: float):
 
 
 def _v_tail(contrib, wj_ref, vj_ref, out_ref, acc_ref,
-            *, frac: float, norm: bool, eps: float, n_k: int):
-    """Accumulate one k-block of Δᵢ Pᵢ, then fuse Eq. 11 at the end."""
-    k = pl.program_id(3)
+            *, frac: float, norm: bool, eps: float, n_k: int,
+            off: int = 0):
+    """Accumulate one k-block of Δᵢ Pᵢ, then fuse Eq. 11 at the end.
+
+    ``off`` is the grid offset of the (client, out, in, k) axes — 1
+    when the stacked-layer axis rides in front."""
+    k = pl.program_id(off + 3)
 
     @pl.when(k == 0)
     def _init():
@@ -62,21 +66,21 @@ def _v_tail(contrib, wj_ref, vj_ref, out_ref, acc_ref,
 
 
 def _v_kernel_dense(w_ref, v_ref, p_ref, wj_ref, vj_ref, out_ref,
-                    acc_ref, *, frac, norm, eps, n_k):
+                    acc_ref, *, frac, norm, eps, n_k, off=0):
     contrib = jax.lax.dot((w_ref[...] - v_ref[...]).astype(jnp.float32),
                           p_ref[...].astype(jnp.float32),
                           preferred_element_type=jnp.float32)
     _v_tail(contrib, wj_ref, vj_ref, out_ref, acc_ref,
-            frac=frac, norm=norm, eps=eps, n_k=n_k)
+            frac=frac, norm=norm, eps=eps, n_k=n_k, off=off)
 
 
 def _v_kernel_left(b_ref, ut_ref, wj_ref, vj_ref, out_ref,
-                   acc_ref, *, frac, norm, eps, n_k):
+                   acc_ref, *, frac, norm, eps, n_k, off=0):
     contrib = jax.lax.dot(b_ref[...].astype(jnp.float32),
                           ut_ref[...].astype(jnp.float32),
                           preferred_element_type=jnp.float32)
     _v_tail(contrib, wj_ref, vj_ref, out_ref, acc_ref,
-            frac=frac, norm=norm, eps=eps, n_k=n_k)
+            frac=frac, norm=norm, eps=eps, n_k=n_k, off=off)
 
 
 @functools.partial(jax.jit, static_argnames=("frac", "norm", "eps",
@@ -153,6 +157,133 @@ def maecho_v_update_factored(W, V, U, s, *, frac: float,
         scratch_shapes=[pltpu.VMEM((bo, bi), jnp.float32)],
         interpret=interpret,
     )(B, UT, W, V)
+
+
+# --------------------------------------------------------------------------
+# stacked-layer variants: the scan-layer axis L rides the grid outermost
+# (grid (L, N, n_out, n_in, n_k)), one launch per leaf covers all layers
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("frac", "norm", "eps",
+                                             "bo", "bi", "bk",
+                                             "interpret"))
+def maecho_v_update_stacked(W, V, P, *, frac: float, norm: bool = False,
+                            eps: float = 1e-12, bo: int = 128,
+                            bi: int = 128, bk: int = 128,
+                            interpret: bool = True):
+    """W: (L, out, in) updated global; V: (N, L, out, in);
+    P: (N, L, in, in).  Returns the (N, L, out, in) Eq. 11 anchors
+    from one launch.  ``norm=True`` needs bi = in_d, as per-layer."""
+    L, out_d, in_d = W.shape
+    N = V.shape[0]
+    bo, bi, bk = min(bo, out_d), min(bi, in_d), min(bk, in_d)
+    if norm:
+        assert bi == in_d, "row-norm needs full rows: set bi = in_d"
+    assert out_d % bo == 0 and in_d % bi == 0 and in_d % bk == 0, (
+        "pad layer dims to block multiples")
+    n_out, n_in, n_k = out_d // bo, in_d // bi, in_d // bk
+    kernel = functools.partial(_v_kernel_dense, frac=frac, norm=norm,
+                               eps=eps, n_k=n_k, off=1)
+    return pl.pallas_call(
+        kernel,
+        grid=(L, N, n_out, n_in, n_k),
+        in_specs=[
+            pl.BlockSpec((None, bo, bk),
+                         lambda l, i, o, j, k: (l, o, k)),          # W (red.)
+            pl.BlockSpec((None, None, bo, bk),
+                         lambda l, i, o, j, k: (i, l, o, k)),       # V
+            pl.BlockSpec((None, None, bk, bi),
+                         lambda l, i, o, j, k: (i, l, k, j)),       # P
+            pl.BlockSpec((None, bo, bi),
+                         lambda l, i, o, j, k: (l, o, j)),          # W (out)
+            pl.BlockSpec((None, None, bo, bi),
+                         lambda l, i, o, j, k: (i, l, o, j)),       # V
+        ],
+        out_specs=pl.BlockSpec((None, None, bo, bi),
+                               lambda l, i, o, j, k: (i, l, o, j)),
+        out_shape=jax.ShapeDtypeStruct(V.shape, V.dtype),
+        scratch_shapes=[pltpu.VMEM((bo, bi), jnp.float32)],
+        interpret=interpret,
+    )(W, V, P, W, V)
+
+
+@functools.partial(jax.jit, static_argnames=("frac", "norm", "eps",
+                                             "bo", "bi", "bk",
+                                             "interpret"))
+def maecho_v_update_factored_stacked(W, V, U, s, *, frac: float,
+                                     norm: bool = False,
+                                     eps: float = 1e-12, bo: int = 128,
+                                     bi: int = 128, bk: int = 128,
+                                     interpret: bool = True):
+    """Stacked factored Pₗᵢ = Uₗᵢ·diag(sₗᵢ)·Uₗᵢᵀ.
+    U: (N, L, in, k); s: (N, L, k)."""
+    from repro.kernels.maecho_gram import compressed_residual
+
+    L, out_d, in_d = W.shape
+    N, _, _, kd = U.shape
+    bo, bi, bk = min(bo, out_d), min(bi, in_d), min(bk, kd)
+    if norm:
+        assert bi == in_d, "row-norm needs full rows: set bi = in_d"
+    assert out_d % bo == 0 and in_d % bi == 0 and kd % bk == 0, (
+        "pad layer dims / rank to block multiples")
+    B = compressed_residual(W, V, U, s)                # (N, L, out, k)
+    UT = jnp.swapaxes(U, 2, 3).astype(jnp.float32)     # (N, L, k, in)
+    n_out, n_in, n_k = out_d // bo, in_d // bi, kd // bk
+    kernel = functools.partial(_v_kernel_left, frac=frac, norm=norm,
+                               eps=eps, n_k=n_k, off=1)
+    return pl.pallas_call(
+        kernel,
+        grid=(L, N, n_out, n_in, n_k),
+        in_specs=[
+            pl.BlockSpec((None, None, bo, bk),
+                         lambda l, i, o, j, k: (i, l, o, k)),       # B
+            pl.BlockSpec((None, None, bk, bi),
+                         lambda l, i, o, j, k: (i, l, k, j)),       # Uᵀ
+            pl.BlockSpec((None, bo, bi),
+                         lambda l, i, o, j, k: (l, o, j)),          # W (out)
+            pl.BlockSpec((None, None, bo, bi),
+                         lambda l, i, o, j, k: (i, l, o, j)),       # V
+        ],
+        out_specs=pl.BlockSpec((None, None, bo, bi),
+                               lambda l, i, o, j, k: (i, l, o, j)),
+        out_shape=jax.ShapeDtypeStruct(V.shape, V.dtype),
+        scratch_shapes=[pltpu.VMEM((bo, bi), jnp.float32)],
+        interpret=interpret,
+    )(B, UT, W, V)
+
+
+@functools.partial(jax.jit, static_argnames=("frac", "norm", "eps",
+                                             "bo", "bi", "interpret"))
+def maecho_v_update_diag_stacked(W, V, p, *, frac: float,
+                                 norm: bool = False, eps: float = 1e-12,
+                                 bo: int = 128, bi: int = 128,
+                                 interpret: bool = True):
+    """Stacked diagonal projectors.  p: (N, L, in)."""
+    L, out_d, in_d = W.shape
+    N = V.shape[0]
+    bo, bi = min(bo, out_d), min(bi, in_d)
+    if norm:
+        assert bi == in_d, "row-norm needs full rows: set bi = in_d"
+    assert out_d % bo == 0 and in_d % bi == 0, (
+        "pad layer dims to block multiples")
+    p4 = p.reshape(N, L, 1, in_d)
+    kernel = functools.partial(_v_diag_kernel, frac=frac, norm=norm,
+                               eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(L, N, out_d // bo, in_d // bi),
+        in_specs=[
+            pl.BlockSpec((None, bo, bi),
+                         lambda l, i, o, j: (l, o, j)),             # W
+            pl.BlockSpec((None, None, bo, bi),
+                         lambda l, i, o, j: (i, l, o, j)),          # V
+            pl.BlockSpec((None, None, 1, bi),
+                         lambda l, i, o, j: (i, l, 0, j)),          # p
+        ],
+        out_specs=pl.BlockSpec((None, None, bo, bi),
+                               lambda l, i, o, j: (i, l, o, j)),
+        out_shape=jax.ShapeDtypeStruct(V.shape, V.dtype),
+        interpret=interpret,
+    )(W, V, p4)
 
 
 def _v_diag_kernel(w_ref, v_ref, p_ref, out_ref, *, frac, norm, eps):

@@ -19,6 +19,7 @@ tile.  All of them assume the "oi" layout — ``core.maecho`` transposes
 from __future__ import annotations
 
 import os
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -39,9 +40,12 @@ __all__ = [
     "maecho_v_update_diag", "rank_downdate", "block_rls_update",
     "maecho_update_auto", "maecho_gram_auto", "maecho_v_update_auto",
     "maecho_streaming_step", "maecho_streaming_gram",
-    "maecho_streaming_apply", "maecho_sharded_gram",
-    "maecho_sharded_apply", "sharded_ok", "axis_size_of",
-    "flash_attention_auto", "interpret_default", "DEFAULT_BLOCK",
+    "maecho_streaming_apply", "maecho_streaming_gram_stacked",
+    "maecho_streaming_apply_stacked", "maecho_sharded_gram",
+    "maecho_sharded_apply", "maecho_sharded_gram_stacked",
+    "maecho_sharded_apply_stacked", "sharded_ok", "axis_size_of",
+    "fallback_warn", "flash_attention_auto", "interpret_default",
+    "DEFAULT_BLOCK",
 ]
 
 _INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
@@ -55,6 +59,22 @@ def interpret_default() -> bool:
     """True unless REPRO_PALLAS_INTERPRET is 0/false/no/off."""
     val = os.environ.get(_INTERPRET_ENV, "1").strip().lower()
     return val not in ("0", "false", "no", "off")
+
+
+_warned_fallbacks: set[str] = set()
+
+
+def fallback_warn(msg: str) -> None:
+    """``warnings.warn`` once per distinct message.
+
+    Silent degradation is the failure mode this guards: a leaf the
+    caller believes is on the kernel / sharded fast path quietly
+    running the jnp oracle.  Dispatch is trace-time, so the warning
+    fires when the program is built, not per step; the dedup set keeps
+    re-traces (new shapes, new cfg) from spamming."""
+    if msg not in _warned_fallbacks:
+        _warned_fallbacks.add(msg)
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
 
 
 def _resolve(interpret):
@@ -278,6 +298,21 @@ def maecho_v_update_auto(W, V, P, *, frac: float, norm: bool = False,
     return out[:, :out_d, :in_d]
 
 
+def _eff_block(block: int, out_d: int, in_d: int,
+               base: int = DEFAULT_BLOCK) -> int:
+    """Clamp a requested streaming-pipeline tile edge to the leaf.
+
+    A caller-tuned ``block`` above ``base`` (``MAEchoConfig.
+    kernel_block``) must never push a leaf that tiles fine at ``base``
+    onto the oracle, nor pad a dim far past its own next
+    base-multiple — the effective edge is capped at the smaller dim's
+    base-rounded size.  Eligibility ("too small to tile") is always
+    judged at ``base``."""
+    cap = max(base, min(-(-out_d // base) * base,
+                        -(-in_d // base) * base))
+    return min(block, cap)
+
+
 def maecho_streaming_gram(W, V, P, *, block: int = DEFAULT_BLOCK,
                           interpret=None):
     """Gram half of the fused leaf iteration: returns ``(G, ctx)``.
@@ -292,9 +327,14 @@ def maecho_streaming_gram(W, V, P, *, block: int = DEFAULT_BLOCK,
     iteration instead of L sequential ones.
     """
     out_d, in_d = W.shape
-    if out_d < block or in_d < block:
+    if out_d < DEFAULT_BLOCK or in_d < DEFAULT_BLOCK:
+        fallback_warn(
+            f"leaf (out={out_d}, in={in_d}) below one "
+            f"{DEFAULT_BLOCK}-tile: running the jnp oracle instead of "
+            f"the streaming kernels")
         return ref.maecho_gram_ref(W, V, P), ("ref", W, V, P,
                                               out_d, in_d)
+    block = _eff_block(block, out_d, in_d)
     kind, Wp, Vp, Pk = _normalize_padded(W, V, P, block)
     if kind == "factored":
         from repro.kernels.maecho_gram import compressed_residual
@@ -302,12 +342,15 @@ def maecho_streaming_gram(W, V, P, *, block: int = DEFAULT_BLOCK,
         Up, sp = Pk
         A = compressed_residual(Wp, Vp, Up, sp)
         UT = jnp.swapaxes(Up, 1, 2).astype(jnp.float32)
-        G = _mg.maecho_gram_left(A, UT, interpret=_resolve(interpret))
+        G = _mg.maecho_gram_left(A, UT, bo=block, bi=block, bk=block,
+                                 interpret=_resolve(interpret))
         return G, (kind, Wp, Vp, (Up, sp, A, UT), out_d, in_d)
     if kind == "full":
-        G = maecho_gram(Wp, Vp, Pk, interpret=interpret)
+        G = maecho_gram(Wp, Vp, Pk, bo=block, bi=block, bk=block,
+                        interpret=interpret)
     else:
-        G = maecho_gram_diag(Wp, Vp, Pk, interpret=interpret)
+        G = maecho_gram_diag(Wp, Vp, Pk, bo=block, bi=block,
+                             interpret=interpret)
     return G, (kind, Wp, Vp, Pk, out_d, in_d)
 
 
@@ -327,24 +370,29 @@ def maecho_streaming_apply(alpha, ctx, *, eta: float = 1.0,
         W_new = ref.maecho_update_ref_any(Wp, Vp, Pk, alpha, eta)
         return W_new, ref.maecho_v_update_ref(W_new, Vp, Pk, frac,
                                               norm, eps)
+    block = _eff_block(block, out_d, in_d)   # same clamp as the gram
     bi = Wp.shape[1] if norm else block
     if kind == "factored":
         Up, sp, A, UT = Pk
         Wn = _mu.maecho_update_left(Wp, A, UT, alpha, eta=eta,
+                                    bo=block, bi=block, bk=block,
                                     interpret=_resolve(interpret))
         Vn = maecho_v_update_factored(Wn, Vp, Up, sp, frac=frac,
-                                      norm=norm, eps=eps, bi=bi,
+                                      norm=norm, eps=eps, bo=block,
+                                      bi=bi, bk=block,
                                       interpret=interpret)
     elif kind == "full":
-        Wn = maecho_update(Wp, Vp, Pk, alpha, eta=eta,
-                           interpret=interpret)
+        Wn = maecho_update(Wp, Vp, Pk, alpha, eta=eta, bo=block,
+                           bi=block, bk=block, interpret=interpret)
         Vn = maecho_v_update(Wn, Vp, Pk, frac=frac, norm=norm, eps=eps,
-                             bi=bi, interpret=interpret)
+                             bo=block, bi=bi, bk=block,
+                             interpret=interpret)
     else:
-        Wn = maecho_update_diag(Wp, Vp, Pk, alpha, eta=eta,
-                                interpret=interpret)
+        Wn = maecho_update_diag(Wp, Vp, Pk, alpha, eta=eta, bo=block,
+                                bi=block, interpret=interpret)
         Vn = maecho_v_update_diag(Wn, Vp, Pk, frac=frac, norm=norm,
-                                  eps=eps, bi=bi, interpret=interpret)
+                                  eps=eps, bo=block, bi=bi,
+                                  interpret=interpret)
     return Wn[:out_d, :in_d], Vn[:, :out_d, :in_d]
 
 
@@ -372,6 +420,142 @@ def maecho_streaming_step(W, V, P, qp, *, eta: float = 1.0,
 
 
 # --------------------------------------------------------------------------
+# stacked-leaf streaming pipeline: the scan-layer axis rides the grid
+# --------------------------------------------------------------------------
+def _proj_kind_stacked(P) -> str:
+    """Kind of a stacked projector leaf with (N, L) leading axes —
+    every unstacked kind shifted by the flattened layer axis."""
+    if isinstance(P, dict):
+        return "factored"
+    if P.ndim == 2:
+        return "scalar"          # (N, L) stacked scalar full projectors
+    if P.ndim == 3:
+        return "diag"            # (N, L, in)
+    return "full"                # (N, L, in, in)
+
+
+def _normalize_padded_stacked(W, V, P, block: int):
+    """Stacked analogue of :func:`_normalize_padded`: classify the
+    projector of a flattened (L, out, in) leaf and zero-pad the
+    out/in (and factored-rank) axes to block multiples.  The layer
+    axis L is a grid axis, never padded."""
+    in_d = W.shape[2]
+    kind = _proj_kind_stacked(P)
+    Wp, po = _pad_to(W, block, 1)
+    Wp, pi = _pad_to(Wp, block, 2)
+    Vp = (_pad_to(_pad_to(V, block, 2)[0], block, 3)[0]
+          if (po or pi) else V)
+    if kind == "factored":
+        Up, _ = _pad_to(P["U"], block, 2)
+        kd = P["U"].shape[3]
+        if kd > block:
+            Up, _ = _pad_to(Up, block, 3)
+            sp, _ = _pad_to(P["s"], block, 2)
+        else:
+            sp = P["s"]
+        Pk = (Up, sp)
+    elif kind in ("scalar", "diag"):
+        p = (jnp.broadcast_to(P[:, :, None], P.shape + (in_d,))
+             if kind == "scalar" else P)
+        Pk = _pad_to(p, block, 2)[0]
+    else:
+        Pk = (_pad_to(_pad_to(P, block, 2)[0], block, 3)[0]
+              if (po or pi) else P)
+    return kind, Wp, Vp, Pk
+
+
+def maecho_streaming_gram_stacked(W, V, P, *, block: int = DEFAULT_BLOCK,
+                                  interpret=None):
+    """Stacked gram half of the fused leaf iteration: ``(G, ctx)``.
+
+    W: (L, out, in); V: (N, L, out, in); P stacked per kind.  G is the
+    per-layer (L, N, N) Eq. 6 Gram stack from ONE kernel launch (the
+    layer axis is the outermost grid dimension — see
+    ``maecho_gram.maecho_gram_stacked``); ``ctx`` is the reuse payload
+    for :func:`maecho_streaming_apply_stacked`, carrying the factored
+    path's (N, L, out, k) compressed residual exactly like the
+    per-layer pipeline.  Shapes below one tile fall back to the vmapped
+    jnp oracle (same contract as :func:`maecho_streaming_gram`)."""
+    L, out_d, in_d = W.shape
+    if out_d < DEFAULT_BLOCK or in_d < DEFAULT_BLOCK:
+        fallback_warn(
+            f"stacked leaf (L={L}, out={out_d}, in={in_d}) below one "
+            f"{DEFAULT_BLOCK}-tile: running the vmapped jnp oracle "
+            f"instead of the stacked kernel grid")
+        G = jax.vmap(ref.maecho_gram_ref, in_axes=(0, 1, 1))(W, V, P)
+        return G, ("ref", W, V, P, out_d, in_d)
+    block = _eff_block(block, out_d, in_d)
+    kind, Wp, Vp, Pk = _normalize_padded_stacked(W, V, P, block)
+    if kind == "factored":
+        Up, sp = Pk
+        A = _mg.compressed_residual(Wp, Vp, Up, sp)     # (N, L, out, k)
+        UT = jnp.swapaxes(Up, 2, 3).astype(jnp.float32)
+        G = _mg.maecho_gram_left_stacked(A, UT, bo=block, bi=block,
+                                         bk=block,
+                                         interpret=_resolve(interpret))
+        return G, (kind, Wp, Vp, (Up, sp, A, UT), out_d, in_d)
+    if kind == "full":
+        G = _mg.maecho_gram_stacked(Wp, Vp, Pk, bo=block, bi=block,
+                                    bk=block,
+                                    interpret=_resolve(interpret))
+    else:
+        G = _mg.maecho_gram_diag_stacked(Wp, Vp, Pk, bo=block,
+                                         bi=block,
+                                         interpret=_resolve(interpret))
+    return G, (kind, Wp, Vp, Pk, out_d, in_d)
+
+
+def maecho_streaming_apply_stacked(alpha, ctx, *, eta: float = 1.0,
+                                   frac: float = 0.5, norm: bool = False,
+                                   eps: float = 1e-12,
+                                   block: int = DEFAULT_BLOCK,
+                                   interpret=None):
+    """Stacked update half: per-layer Eq. 7 then Eq. 11 from one
+    launch each.  ``alpha`` is the (L, N) per-layer solve stack;
+    ``ctx`` comes from :func:`maecho_streaming_gram_stacked` for the
+    same leaf.  Returns ``(W', V')`` cropped to the original shape."""
+    kind, Wp, Vp, Pk, out_d, in_d = ctx
+    itp = _resolve(interpret)
+    if kind == "ref":
+        W_new = jax.vmap(
+            lambda w, v, p, a: ref.maecho_update_ref_any(w, v, p, a,
+                                                         eta),
+            in_axes=(0, 1, 1, 0))(Wp, Vp, Pk, alpha)
+        V_new = jax.vmap(
+            lambda w, v, p: ref.maecho_v_update_ref(w, v, p, frac,
+                                                    norm, eps),
+            in_axes=(0, 1, 1), out_axes=1)(W_new, Vp, Pk)
+        return W_new, V_new
+    block = _eff_block(block, out_d, in_d)   # same clamp as the gram
+    bi = Wp.shape[2] if norm else block
+    if kind == "factored":
+        Up, sp, A, UT = Pk
+        Wn = _mu.maecho_update_left_stacked(Wp, A, UT, alpha, eta=eta,
+                                            bo=block, bi=block,
+                                            bk=block, interpret=itp)
+        Vn = _mv.maecho_v_update_factored_stacked(
+            Wn, Vp, Up, sp, frac=frac, norm=norm, eps=eps, bo=block,
+            bi=bi, bk=block, interpret=itp)
+    elif kind == "full":
+        Wn = _mu.maecho_update_stacked(Wp, Vp, Pk, alpha, eta=eta,
+                                       bo=block, bi=block, bk=block,
+                                       interpret=itp)
+        Vn = _mv.maecho_v_update_stacked(Wn, Vp, Pk, frac=frac,
+                                         norm=norm, eps=eps, bo=block,
+                                         bi=bi, bk=block,
+                                         interpret=itp)
+    else:
+        Wn = _mu.maecho_update_diag_stacked(Wp, Vp, Pk, alpha, eta=eta,
+                                            bo=block, bi=block,
+                                            interpret=itp)
+        Vn = _mv.maecho_v_update_diag_stacked(Wn, Vp, Pk, frac=frac,
+                                              norm=norm, eps=eps,
+                                              bo=block, bi=bi,
+                                              interpret=itp)
+    return Wn[:, :out_d, :in_d], Vn[:, :, :out_d, :in_d]
+
+
+# --------------------------------------------------------------------------
 # mesh-sharded streaming pipeline: out-dim-parallel gram / apply
 # --------------------------------------------------------------------------
 def _axis_names(axis) -> tuple:
@@ -390,7 +574,7 @@ def axis_size_of(mesh, axis) -> int:
 
 
 def sharded_ok(out_d: int, in_d: int, axis_size: int,
-               block: int = DEFAULT_BLOCK) -> bool:
+               block: int = DEFAULT_BLOCK, warn: bool = False) -> bool:
     """Eligibility of a leaf for the out-dim-sharded pipeline.
 
     Both dims must reach one tile and the out-dim's *tile count* must
@@ -398,11 +582,20 @@ def sharded_ok(out_d: int, in_d: int, axis_size: int,
     divisibility contract at block granularity (every device gets the
     same number of whole tiles; GSPMD-style uneven shards would skew
     the per-device kernels).  Ineligible leaves stay on the
-    single-device kernel/oracle path.
+    single-device kernel/oracle path; with ``warn=True`` (the dispatch
+    path in ``core.maecho`` sets it) that fallback is surfaced once
+    via :func:`fallback_warn` instead of happening silently.
     """
     if out_d < block or in_d < block:
-        return False
-    return (-(-out_d // block)) % axis_size == 0
+        ok = False
+    else:
+        ok = (-(-out_d // block)) % axis_size == 0
+    if not ok and warn:
+        fallback_warn(
+            f"sharded-ineligible leaf (out={out_d}, in={in_d}, "
+            f"axis_size={axis_size}, block={block}): falling back to "
+            f"the single-device dispatch")
+    return ok
 
 
 def maecho_sharded_gram(W, V, P, *, mesh, axis="data",
@@ -538,6 +731,140 @@ def maecho_sharded_apply(alpha, ctx, *, mesh, axis="data",
             body_g, mesh=mesh, in_specs=(rep1, row, crow, rep2),
             out_specs=(row, crow), check_rep=False)(alpha, Wp, Vp, Pk)
     return Wn[:out_d, :in_d], Vn[:, :out_d, :in_d]
+
+
+def maecho_sharded_gram_stacked(W, V, P, *, mesh, axis="data",
+                                block: int = DEFAULT_BLOCK,
+                                interpret=None):
+    """Out-dim-sharded stacked gram half.
+
+    Same contract as :func:`maecho_sharded_gram` with the flattened
+    scan-layer axis riding the kernel grid inside every shard:
+    W (L, out, in) splits its out-rows over ``axis``, each device runs
+    ONE stacked kernel launch over its (L, out/axis_size, in) slab,
+    and a single ``psum`` per leaf per outer iteration reconstructs
+    the replicated (L, N, N) Gram stack that feeds the (unchanged)
+    stacked QP solve.  The factored path's (N, L, out, k) compressed
+    residual is computed sharded and carried in ``ctx``.
+    """
+    names = _axis_names(axis)
+    asz = axis_size_of(mesh, axis)
+    L, out_d, in_d = W.shape
+    kind = _proj_kind_stacked(P)
+    itp = _resolve(interpret)
+    Wp = _pad_to(_pad_to(W, block * asz, 1)[0], block, 2)[0]
+    Vp = _pad_to(_pad_to(V, block * asz, 2)[0], block, 3)[0]
+    row = PartitionSpec(None, names, None)          # W rows (axis 1)
+    crow = PartitionSpec(None, None, names, None)   # V / A rows (axis 2)
+    rep3 = PartitionSpec(None, None, None)
+    rep4 = PartitionSpec(None, None, None, None)
+    if kind == "factored":
+        Up, _ = _pad_to(P["U"], block, 2)
+        kd = P["U"].shape[3]
+        if kd > block:
+            Up, _ = _pad_to(Up, block, 3)
+            sp, _ = _pad_to(P["s"], block, 2)
+        else:
+            sp = P["s"]
+
+        def body_f(Wl, Vl, U, s):
+            A = _mg.compressed_residual(Wl, Vl, U, s)
+            UT = jnp.swapaxes(U, 2, 3).astype(jnp.float32)
+            Gl = _mg.maecho_gram_left_stacked(A, UT, interpret=itp)
+            return jax.lax.psum(Gl, names), A
+
+        G, A = shard_map(body_f, mesh=mesh,
+                         in_specs=(row, crow, rep4, rep3),
+                         out_specs=(rep3, crow),
+                         check_rep=False)(Wp, Vp, Up, sp)
+        return G, (kind, Wp, Vp, (Up, sp, A), out_d, in_d)
+    if kind == "full":
+        Pk = _pad_to(_pad_to(P, block, 2)[0], block, 3)[0]
+
+        def body_d(Wl, Vl, Pl):
+            return jax.lax.psum(
+                _mg.maecho_gram_stacked(Wl, Vl, Pl, interpret=itp),
+                names)
+
+        G = shard_map(body_d, mesh=mesh, in_specs=(row, crow, rep4),
+                      out_specs=rep3, check_rep=False)(Wp, Vp, Pk)
+    else:                                   # scalar / diag
+        p = (jnp.broadcast_to(P[:, :, None], P.shape + (in_d,))
+             if kind == "scalar" else P)
+        Pk = _pad_to(p, block, 2)[0]
+
+        def body_g(Wl, Vl, pl_):
+            return jax.lax.psum(
+                _mg.maecho_gram_diag_stacked(Wl, Vl, pl_,
+                                             interpret=itp), names)
+
+        G = shard_map(body_g, mesh=mesh, in_specs=(row, crow, rep3),
+                      out_specs=rep3, check_rep=False)(Wp, Vp, Pk)
+    return G, (kind, Wp, Vp, Pk, out_d, in_d)
+
+
+def maecho_sharded_apply_stacked(alpha, ctx, *, mesh, axis="data",
+                                 eta: float = 1.0, frac: float = 0.5,
+                                 norm: bool = False, eps: float = 1e-12,
+                                 block: int = DEFAULT_BLOCK,
+                                 interpret=None):
+    """Stacked update half of the sharded pipeline: per-layer Eq. 7
+    then Eq. 11, row-local on each device's owned out-rows under the
+    same sharding as :func:`maecho_sharded_gram_stacked` — zero
+    collectives (the gram psum is the iteration's only one).
+    ``alpha`` is the replicated (L, N) per-layer solve stack.
+    Returns ``(W', V')`` cropped to the original shape."""
+    kind, Wp, Vp, Pk, out_d, in_d = ctx
+    names = _axis_names(axis)
+    itp = _resolve(interpret)
+    bi = Wp.shape[2] if norm else block
+    row = PartitionSpec(None, names, None)
+    crow = PartitionSpec(None, None, names, None)
+    rep2 = PartitionSpec(None, None)
+    rep3 = PartitionSpec(None, None, None)
+    rep4 = PartitionSpec(None, None, None, None)
+    if kind == "factored":
+        Up, sp, A = Pk
+
+        def body_f(a, Wl, Vl, U, s, Al):
+            UT = jnp.swapaxes(U, 2, 3).astype(jnp.float32)
+            Wn = _mu.maecho_update_left_stacked(Wl, Al, UT, a, eta=eta,
+                                                interpret=itp)
+            Vn = _mv.maecho_v_update_factored_stacked(
+                Wn, Vl, U, s, frac=frac, norm=norm, eps=eps, bi=bi,
+                interpret=itp)
+            return Wn, Vn
+
+        Wn, Vn = shard_map(
+            body_f, mesh=mesh,
+            in_specs=(rep2, row, crow, rep4, rep3, crow),
+            out_specs=(row, crow), check_rep=False)(
+            alpha, Wp, Vp, Up, sp, A)
+    elif kind == "full":
+        def body_d(a, Wl, Vl, Pl):
+            Wn = _mu.maecho_update_stacked(Wl, Vl, Pl, a, eta=eta,
+                                           interpret=itp)
+            Vn = _mv.maecho_v_update_stacked(Wn, Vl, Pl, frac=frac,
+                                             norm=norm, eps=eps, bi=bi,
+                                             interpret=itp)
+            return Wn, Vn
+
+        Wn, Vn = shard_map(
+            body_d, mesh=mesh, in_specs=(rep2, row, crow, rep4),
+            out_specs=(row, crow), check_rep=False)(alpha, Wp, Vp, Pk)
+    else:                                   # scalar / diag
+        def body_g(a, Wl, Vl, pl_):
+            Wn = _mu.maecho_update_diag_stacked(Wl, Vl, pl_, a, eta=eta,
+                                                interpret=itp)
+            Vn = _mv.maecho_v_update_diag_stacked(
+                Wn, Vl, pl_, frac=frac, norm=norm, eps=eps, bi=bi,
+                interpret=itp)
+            return Wn, Vn
+
+        Wn, Vn = shard_map(
+            body_g, mesh=mesh, in_specs=(rep2, row, crow, rep3),
+            out_specs=(row, crow), check_rep=False)(alpha, Wp, Vp, Pk)
+    return Wn[:, :out_d, :in_d], Vn[:, :, :out_d, :in_d]
 
 
 def flash_attention_auto(q, k, v, *, causal: bool = True, bq: int = 256,

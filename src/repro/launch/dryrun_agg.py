@@ -9,7 +9,13 @@ the 40 standard pairs; this is the "most representative of the paper's
 technique" hillclimb target in EXPERIMENTS.md §Perf.
 
   PYTHONPATH=src python -m repro.launch.dryrun_agg --arch llama3-8b \
-      [--clients 8] [--multipod]
+      [--clients 8] [--multipod] [--backend kernel|auto|sharded]
+
+``--backend`` selects the aggregation compute path to compile; every
+run prints a ``[coverage]`` per-backend leaf summary (which leaves
+ride the kernel / sharded pipelines, which fall back to the oracle —
+scan-over-layers leaves now fold their layer axis into the kernel
+grid instead of forcing the oracle).
 
 ``--sharded-smoke`` instead EXECUTES an 8-way out-dim-sharded
 aggregation (``core.maecho`` backend="sharded") on forced host devices
@@ -49,8 +55,31 @@ from repro.sharding.rules import make_rules  # noqa: E402
 from repro.utils import trees  # noqa: E402
 
 
+def coverage_report(W0, Pp, levels_tree, macfg, backend: str,
+                    mesh=None, convention: str = "io") -> dict:
+    """Print the per-backend leaf-coverage summary: which compute path
+    every leaf of the aggregation takes under the requested backend —
+    the CLI face of ``core.maecho.dispatch_summary``, so a leaf
+    silently degraded to the oracle is visible instead of buried in a
+    trace-time warning."""
+    from repro.core.maecho import dispatch_summary
+
+    per_leaf, counts = dispatch_summary(W0, Pp, levels_tree, macfg,
+                                        convention, backend, mesh)
+    total = len(per_leaf)
+    summary = ", ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+    print(f"[coverage] backend={backend}: {total} leaves ({summary})")
+    if backend != "oracle":
+        for path, lv, route in per_leaf:
+            if route == "oracle":
+                print(f"[coverage]   oracle fallback: {path}"
+                      f" (stack_levels={lv})")
+    return counts
+
+
 def build_agg(arch: str, n_clients: int, mesh, tau: int,
-              rank: int = 0):
+              rank: int = 0, backend: str = "oracle",
+              agg_mesh=None):
     cfg = get_config(arch)
     model = get_model(cfg)
     rules = make_rules(mesh, cfg)
@@ -109,27 +138,35 @@ def build_agg(arch: str, n_clients: int, mesh, tau: int,
                  trees.map_with_path(p_sh, Pp))
 
     macfg = MAEchoConfig(tau=tau, eta=0.5, qp_iters=50)
+    levels_tree = trees.map_with_path(lambda p, _: levels_fn(p), W0)
 
     def step(W, V, Pr):
-        return _maecho_jit(W, V, Pr, macfg, "io", levels)
+        return _maecho_jit(W, V, Pr, macfg, "io", levels, backend,
+                           agg_mesh)
 
-    return step, (W0, V0, Pp), shardings, cfg
+    return step, (W0, V0, Pp), shardings, cfg, (macfg, levels_tree)
 
 
 def run(arch: str, n_clients: int, multi_pod: bool,
-        out_dir: str = "experiments/dryrun", rank: int = 0) -> dict:
+        out_dir: str = "experiments/dryrun", rank: int = 0,
+        backend: str = "oracle") -> dict:
     mesh_name = "2x16x16" if multi_pod else "16x16"
     mesh = make_production_mesh(multi_pod=multi_pod)
+    agg_mesh = mesh if backend == "sharded" else None
     tag = f"aggregate_N{n_clients}" + (f"_rank{rank}" if rank else "")
     rec = {"arch": arch, "shape": tag,
            "mesh": mesh_name, "status": "ok", "kind": "aggregate",
-           "rank": rank}
+           "rank": rank, "backend": backend}
     t0 = time.time()
     try:
         costs = {}
         for tau in (1, 2):
-            step, args, sh, cfg = build_agg(arch, n_clients, mesh, tau,
-                                            rank)
+            step, args, sh, cfg, (macfg, levels_tree) = build_agg(
+                arch, n_clients, mesh, tau, rank, backend, agg_mesh)
+            if tau == 1:
+                rec["coverage"] = coverage_report(
+                    args[0], args[2], levels_tree, macfg, backend,
+                    agg_mesh)
             with mesh:
                 compiled = jax.jit(
                     step, in_shardings=sh).lower(*args).compile()
@@ -192,16 +229,19 @@ def run_sharded_smoke(n_devices: int = 8, out_d: int = 1024,
     aggregation and check parity against the single-device oracle.
 
     A mixed tree — dense, factored and diagonal projectors, a
-    non-divisible leaf exercising the single-device fallback, and a
-    bias on the scalar rule — so one run covers every dispatch branch
-    of ``backend="sharded"``.  Returns the record; parity must be
-    <1e-3 in weight space (the ISSUE acceptance bound).
+    non-divisible leaf exercising the single-device fallback, a bias
+    on the scalar rule, and a scan-over-layers stacked leaf whose
+    layer axis rides the kernel grid (one (L, N, N) psum per outer
+    iteration) — so one run covers every dispatch branch of
+    ``backend="sharded"``.  Returns the record; parity must be <1e-3
+    in weight space (the ISSUE acceptance bound).
     """
     from repro.core.maecho import MAEchoConfig, maecho_aggregate
     from repro.launch.mesh import make_debug_mesh
 
     mesh = make_debug_mesh(n_devices, 1)
     odd = 2 * (out_d // n_devices) + 64        # tiles don't divide
+    n_stack = 3                                # scanned layers
     clients, projs = [], []
     for i in range(n_clients):
         k = jax.random.PRNGKey(31 * i + 7)
@@ -210,12 +250,19 @@ def run_sharded_smoke(n_devices: int = 8, out_d: int = 1024,
         s = jax.random.uniform(jax.random.fold_in(kf, 1), (32,))
         Ud = jnp.linalg.qr(jax.random.normal(kd, (in_d, 16)))[0]
         sd = jax.random.uniform(jax.random.fold_in(kd, 1), (16,))
+        ks = jax.random.fold_in(k, 9)
+        Us = jnp.linalg.qr(jax.random.normal(ks,
+                                             (n_stack, in_d, 16)))[0]
+        ss = jax.random.uniform(jax.random.fold_in(ks, 1),
+                                (n_stack, 16))
         clients.append({
             "dense": jax.random.normal(kd, (out_d, in_d)) * 0.3,
             "fact": jax.random.normal(kf, (out_d, in_d)) * 0.3,
             "diag": jax.random.normal(kg, (out_d, in_d)) * 0.3,
             "odd": jax.random.normal(jax.random.fold_in(kg, 2),
                                      (odd, in_d)) * 0.3,
+            "stack": jax.random.normal(jax.random.fold_in(ks, 2),
+                                       (n_stack, out_d, in_d)) * 0.3,
             "b": jax.random.normal(kb, (out_d,)) * 0.1,
         })
         projs.append({
@@ -224,13 +271,21 @@ def run_sharded_smoke(n_devices: int = 8, out_d: int = 1024,
             "diag": jax.random.uniform(jax.random.fold_in(kg, 1),
                                        (in_d,)),
             "odd": (Ud * sd) @ Ud.T,
+            "stack": jnp.einsum("lik,lk,ljk->lij", Us, ss, Us),
             "b": jnp.ones(()),
         })
+    levels = {k: (1 if k == "stack" else 0) for k in clients[0]}
     cfg = MAEchoConfig(tau=tau, eta=0.5, qp_iters=60)
+    from repro.utils import trees as _trees
+    coverage_report(clients[0],
+                    _trees.tree_map(lambda *xs: jnp.stack(xs, 0),
+                                    *projs),
+                    levels, cfg, "sharded", mesh, convention="oi")
     t0 = time.time()
-    a = maecho_aggregate(clients, projs, cfg, backend="oracle")
+    a = maecho_aggregate(clients, projs, cfg, backend="oracle",
+                         stack_levels=levels)
     b = maecho_aggregate(clients, projs, cfg, backend="sharded",
-                         mesh=mesh)
+                         mesh=mesh, stack_levels=levels)
     err = max(float(jnp.max(jnp.abs(a[key] - b[key]))) for key in a)
     ok = err < 1e-3
     rec = {"kind": "sharded_smoke", "devices": n_devices,
@@ -239,7 +294,8 @@ def run_sharded_smoke(n_devices: int = 8, out_d: int = 1024,
            "status": "ok" if ok else "PARITY_FAIL",
            "elapsed_s": round(time.time() - t0, 1)}
     print(f"[{'ok' if ok else 'FAIL'}] sharded smoke: {n_devices} "
-          f"devices, out={out_d} (+{odd} fallback leaf), "
+          f"devices, out={out_d} (+{odd} fallback leaf, "
+          f"+{n_stack}-layer stacked leaf), "
           f"max|sharded - oracle| = {err:.2e} "
           f"({rec['elapsed_s']}s)")
     return rec
@@ -252,6 +308,10 @@ def main() -> None:
     ap.add_argument("--multipod", action="store_true")
     ap.add_argument("--rank", type=int, default=0,
                     help="factored-P rank (0 = full projectors)")
+    ap.add_argument("--backend", default="oracle",
+                    choices=["oracle", "kernel", "auto", "sharded"],
+                    help="aggregation compute path to compile + "
+                         "report leaf coverage for")
     ap.add_argument("--sharded-smoke", action="store_true",
                     help="execute an 8-way sharded aggregation and "
                          "assert parity with the oracle (set "
@@ -261,7 +321,8 @@ def main() -> None:
     if args.sharded_smoke:
         rec = run_sharded_smoke(args.smoke_devices)
         raise SystemExit(0 if rec["status"] == "ok" else 1)
-    rec = run(args.arch, args.clients, args.multipod, rank=args.rank)
+    rec = run(args.arch, args.clients, args.multipod, rank=args.rank,
+              backend=args.backend)
     raise SystemExit(0 if rec["status"] == "ok" else 1)
 
 

@@ -16,13 +16,17 @@ from __future__ import annotations
 
 import functools
 import inspect
+import os
 import random
 import types
+import zlib
 
 # cap per-test examples so the stubbed suite stays fast; the real
-# library honours the full max_examples the tests request
+# library honours the full max_examples the tests request.  The CI
+# property lane raises the cap via REPRO_STUB_MAX_EXAMPLES for a
+# deeper deterministic sweep of the same strategies.
 _DEFAULT_EXAMPLES = 5
-_MAX_EXAMPLES_CAP = 8
+_MAX_EXAMPLES_CAP = int(os.environ.get("REPRO_STUB_MAX_EXAMPLES", "8"))
 
 
 class _Strategy:
@@ -87,6 +91,12 @@ def given(*arg_strategies, **kw_strategies):
                 "strategies; mixing fixtures with @given needs the "
                 "real hypothesis (pip install hypothesis)")
 
+        # test identity folded into the seed (crc32: deterministic
+        # across processes, unlike hash()): otherwise every test draws
+        # the IDENTICAL value sequence from shared strategies and a
+        # sampled_from category can be globally unreachable
+        fn_salt = zlib.crc32(fn.__qualname__.encode())
+
         @functools.wraps(fn)
         def wrapper(*args, **kw):
             n = getattr(wrapper, "_stub_max_examples", None)
@@ -94,8 +104,8 @@ def given(*arg_strategies, **kw_strategies):
                 n = getattr(fn, "_stub_max_examples", _DEFAULT_EXAMPLES)
             for ex in range(min(n, _MAX_EXAMPLES_CAP)):
                 # fresh seeded stream per example: deterministic across
-                # runs, varied across examples
-                r = random.Random(0xA11CE + 7919 * ex)
+                # runs, varied across examples and across tests
+                r = random.Random((0xA11CE ^ fn_salt) + 7919 * ex)
                 vals = [s.draw(r) for s in arg_strategies]
                 kwvals = {k: s.draw(r) for k, s in kw_strategies.items()}
                 fn(*args, *vals, **kw, **kwvals)

@@ -17,10 +17,14 @@ import sys
 import numpy as np
 import pytest
 
+# tests/ on sys.path unconditionally: the shared strategy module
+# (tests/strategies.py) is imported by name from the property-test
+# modules whether or not the real hypothesis is installed
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+
 try:
     import hypothesis  # noqa: F401
 except ModuleNotFoundError:
-    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
     import _hypothesis_stub
 
     sys.modules["hypothesis"] = _hypothesis_stub

@@ -190,3 +190,74 @@ def test_no_suites_discovered_is_not_a_failure(tmp_path):
     rc = chk.main(["--bench-dir", str(tmp_path),
                    "--baseline", str(tmp_path / "baselines.json")])
     assert rc == 0
+
+
+# --------------------------------------------------------------------------
+# --check-registered: PERF_SUITES registry vs baseline entries
+# --------------------------------------------------------------------------
+def _write_registry(tmp_path, suites):
+    reg = tmp_path / "run.py"
+    reg.write_text("SUITES = {}\nPERF_SUITES = "
+                   + json.dumps(suites) + "\n")
+    return reg
+
+
+def test_registered_suite_without_baseline_fails(tmp_path):
+    """A suite registered in run.py's PERF_SUITES with NO baseline
+    entry fails the gate with a clear message — the drift where a new
+    bench suite lands but its baseline never gets committed."""
+    chk = _load_checker()
+    _write_bench(tmp_path, "foo", [_row("foo/x", 1000)])
+    baseline = tmp_path / "baselines.json"
+    baseline.write_text(json.dumps({"foo": {"foo/x": 1000}}))
+    reg = _write_registry(tmp_path, ["foo", "newsuite"])
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(baseline),
+                   "--check-registered", "--registry", str(reg)])
+    assert rc == 1
+    # with every registered suite baselined, the same gate passes
+    baseline.write_text(json.dumps({"foo": {"foo/x": 1000},
+                                    "newsuite": {}}))
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(baseline),
+                   "--check-registered", "--registry", str(reg)])
+    assert rc == 0
+
+
+def test_registered_check_is_opt_in(tmp_path):
+    """Without --check-registered, a missing baseline entry for a
+    registered suite does not fail (scratch-baseline workflows)."""
+    chk = _load_checker()
+    _write_bench(tmp_path, "foo", [_row("foo/x", 1000)])
+    baseline = tmp_path / "baselines.json"
+    baseline.write_text(json.dumps({"foo": {"foo/x": 1000}}))
+    _write_registry(tmp_path, ["foo", "newsuite"])
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(baseline)])
+    assert rc == 0
+
+
+def test_registered_check_missing_registry_is_noop(tmp_path):
+    chk = _load_checker()
+    _write_bench(tmp_path, "foo", [_row("foo/x", 1000)])
+    baseline = tmp_path / "baselines.json"
+    baseline.write_text(json.dumps({"foo": {"foo/x": 1000}}))
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(baseline), "--check-registered",
+                   "--registry", str(tmp_path / "nope.py")])
+    assert rc == 0
+
+
+def test_repo_registry_parses_and_baselines_complete():
+    """The real benchmarks/run.py PERF_SUITES parses via ast and every
+    registered perf suite carries a committed baseline entry — the
+    in-repo invariant the CI flag enforces."""
+    chk = _load_checker()
+    suites = chk.registered_perf_suites(str(_ROOT / "benchmarks"
+                                            / "run.py"))
+    assert "stacked_agg" in suites and "kernels" in suites
+    with open(_ROOT / "benchmarks" / "baselines.json") as f:
+        baseline = json.load(f)
+    assert not set(suites) - set(baseline), (
+        "registered perf suites missing baselines: "
+        f"{set(suites) - set(baseline)}")

@@ -1,85 +1,184 @@
-"""Fused streaming MA-Echo aggregation pipeline: kernel-vs-oracle
-parity (interpret mode) across projector kinds, padding paths and the
-full-aggregate backend dispatch."""
+"""Fused streaming MA-Echo pipeline: property-based kernel-vs-oracle
+parity (interpret mode) across projector kinds, shapes (tiled, padded,
+sub-tile), conventions, stack_levels 0–3 and ragged client masks —
+the strategies live in ``tests/strategies.py``; under the container's
+deterministic hypothesis stub each ``@given`` runs a fixed seeded
+sample, and the real ``hypothesis`` library upgrades the same tests to
+adaptive property search.  Hand-picked regression cases (rank above
+one tile, exact sub-tile fallback, the "io" transposition contract,
+fori_loop + norm) stay alongside.
+"""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
 
+import strategies as strat
 from repro.core import projections as proj
 from repro.core.maecho import MAEchoConfig, maecho_aggregate
 from repro.kernels import ops, ref
 
 
-def _layer(seed, out_d, in_d, N):
-    k = jax.random.PRNGKey(seed)
-    W = jax.random.normal(k, (out_d, in_d))
-    V = jax.random.normal(jax.random.fold_in(k, 1), (N, out_d, in_d))
-    return k, W, V
+def _one_device_mesh():
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(jax.devices()[:1]), ("data",))
 
 
-def _proj_of_kind(k, kind, N, in_d, rank=32):
-    if kind == "scalar":
-        return jax.random.uniform(jax.random.fold_in(k, 2), (N,))
-    if kind == "diag":
-        return jax.random.uniform(jax.random.fold_in(k, 2), (N, in_d))
-    U = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(k, 2),
-                                        (N, in_d, min(rank, in_d))))[0]
-    s = jax.random.uniform(jax.random.fold_in(k, 3),
-                           (N, min(rank, in_d)))
-    if kind == "factored":
-        return {"U": U, "s": s}
-    # full: PSD low-rank-ish, per client
-    return jnp.einsum("nik,nk,njk->nij", U, s, U)
+CFG = MAEchoConfig(tau=2, eta=0.5, qp_iters=60)
 
 
-KINDS = ["scalar", "diag", "full", "factored"]
-
-# 128-multiples (direct tiling) and odd shapes (padding path)
-SHAPES = [(256, 384, 3), (200, 300, 2), (128, 128, 1), (384, 140, 4)]
-
-
-@pytest.mark.parametrize("kind", KINDS)
-@pytest.mark.parametrize("out_d,in_d,N", SHAPES)
-def test_gram_parity(kind, out_d, in_d, N):
-    k, W, V = _layer(out_d + in_d + N, out_d, in_d, N)
-    P = _proj_of_kind(k, kind, N, in_d)
+# --------------------------------------------------------------------------
+# kernel-level property parity: the three auto wrappers
+# --------------------------------------------------------------------------
+@given(strat.seeds(), strat.n_clients(), strat.kinds(), strat.shapes())
+@settings(max_examples=8, deadline=None)
+def test_gram_parity(seed, n, kind, shape):
+    W, V, P = strat.build_layer(seed, n, kind, shape)
     got = ops.maecho_gram_auto(W, V, P)
     want = ref.maecho_gram_ref(W, V, P)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=1e-2, rtol=1e-4)
 
 
-@pytest.mark.parametrize("kind", KINDS)
-@pytest.mark.parametrize("norm", [False, True])
-def test_v_update_parity(kind, norm):
-    out_d, in_d, N = 256, 200, 3
-    k, W, V = _layer(17, out_d, in_d, N)
-    P = _proj_of_kind(k, kind, N, in_d)
+@given(strat.seeds(), strat.n_clients(), strat.kinds(), strat.shapes(),
+       strat.bools())
+@settings(max_examples=8, deadline=None)
+def test_v_update_parity(seed, n, kind, shape, norm):
+    W, V, P = strat.build_layer(seed, n, kind, shape)
     got = ops.maecho_v_update_auto(W, V, P, frac=0.5, norm=norm)
     want = ref.maecho_v_update_ref(W, V, P, 0.5, norm)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=1e-4, rtol=1e-4)
 
 
-@pytest.mark.parametrize("kind", KINDS)
-def test_update_parity(kind):
-    out_d, in_d, N = 200, 384, 3
-    k, W, V = _layer(29, out_d, in_d, N)
-    P = _proj_of_kind(k, kind, N, in_d)
-    alpha = jax.nn.softmax(jax.random.normal(jax.random.fold_in(k, 9),
-                                             (N,)))
+@given(strat.seeds(), strat.n_clients(), strat.kinds(), strat.shapes())
+@settings(max_examples=8, deadline=None)
+def test_update_parity(seed, n, kind, shape):
+    W, V, P = strat.build_layer(seed, n, kind, shape)
+    alpha = jax.nn.softmax(jax.random.normal(
+        jax.random.PRNGKey(seed + 1), (n,)))
     got = ops.maecho_update_auto(W, V, P, alpha, eta=0.7)
     want = ref.maecho_update_ref_any(W, V, P, alpha, 0.7)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=1e-4, rtol=1e-4)
 
 
+# --------------------------------------------------------------------------
+# stacked kernel-level property parity: the layer axis on the grid
+# --------------------------------------------------------------------------
+@given(strat.seeds(), strat.n_clients(), strat.kinds(),
+       strat.shapes(), strat.bools())
+@settings(max_examples=6, deadline=None)
+def test_streaming_stacked_parity(seed, n, kind, shape, norm):
+    L = 2 + seed % 3
+    W, V, P = strat.build_layer(seed, n, kind, shape, lead=(L,))
+    alpha = jax.nn.softmax(jax.random.normal(
+        jax.random.PRNGKey(seed + 2), (L, n)), axis=-1)
+
+    def step(W, V, P):
+        G, ctx = ops.maecho_streaming_gram_stacked(W, V, P)
+        Wn, Vn = ops.maecho_streaming_apply_stacked(
+            alpha, ctx, eta=0.7, frac=0.5, norm=norm)
+        return G, Wn, Vn
+
+    G, Wn, Vn = jax.jit(step)(W, V, P)
+    Gr = jax.vmap(ref.maecho_gram_ref, in_axes=(0, 1, 1))(W, V, P)
+    Wr = jax.vmap(lambda w, v, p, a:
+                  ref.maecho_update_ref_any(w, v, p, a, 0.7),
+                  in_axes=(0, 1, 1, 0))(W, V, P, alpha)
+    Vr = jax.vmap(lambda w, v, p:
+                  ref.maecho_v_update_ref(w, v, p, 0.5, norm),
+                  in_axes=(0, 1, 1), out_axes=1)(Wr, V, P)
+    np.testing.assert_allclose(np.asarray(G), np.asarray(Gr),
+                               atol=1e-2, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(Wn), np.asarray(Wr),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(Vn), np.asarray(Vr),
+                               atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# full-aggregate property parity: oracle vs kernel/auto/sharded, with
+# stacked leaves, mixed trees, both conventions and ragged masks
+# --------------------------------------------------------------------------
+def _agg(clients, projs, levels, convention, backend, mesh=None,
+         mask=None, cfg=CFG):
+    return maecho_aggregate(clients, projs, cfg, convention=convention,
+                            stack_levels=levels, backend=backend,
+                            mesh=mesh, client_mask=mask)
+
+
+def _assert_close(a, b, tol=1e-3):
+    for key in ("W", "b"):
+        np.testing.assert_allclose(np.asarray(a[key]),
+                                   np.asarray(b[key]), atol=tol)
+
+
+@given(strat.seeds(), strat.n_clients(), strat.kinds(),
+       strat.conventions(), strat.leads(), strat.shapes(),
+       strat.masked())
+@settings(max_examples=8, deadline=None)
+def test_aggregate_parity_all_backends(seed, n, kind, convention, lead,
+                                       shape, use_mask):
+    """The acceptance property: kernel / auto / sharded all match the
+    oracle to <1e-3 on a mixed pytree — any projector kind, either
+    convention, stack_levels 0–3, tiled / padded / sub-tile shapes,
+    with and without ragged client masks."""
+    clients, projs, levels, mask = strat.build_case(
+        seed, n, kind, convention, lead, shape, use_mask)
+    want = _agg(clients, projs, levels, convention, "oracle", mask=mask)
+    for backend, mesh in (("kernel", None), ("auto", None),
+                          ("sharded", _one_device_mesh())):
+        got = _agg(clients, projs, levels, convention, backend,
+                   mesh=mesh, mask=mask)
+        _assert_close(want, got)
+
+
+@pytest.mark.parametrize("convention", strat.CONVENTIONS)
+@pytest.mark.parametrize("kind", strat.KINDS)
+def test_aggregate_parity_each_kind_pinned(kind, convention):
+    """Sampler-proof floor under the property test above: every
+    projector kind × convention pair is guaranteed to exercise the
+    kernel and sharded backends on a stacked leaf — in particular the
+    dense-P "io" transposition contract (`_to_kernel_layout`'s
+    trailing-axes swap) — whatever the (stub or real) sampler happens
+    to draw."""
+    clients, projs, levels, _ = strat.build_case(
+        7, 3, kind, convention, (2,), (128, 128), False)
+    want = _agg(clients, projs, levels, convention, "oracle")
+    for backend, mesh in (("kernel", None),
+                          ("sharded", _one_device_mesh())):
+        _assert_close(want, _agg(clients, projs, levels,
+                                 backend=backend,
+                                 convention=convention, mesh=mesh))
+
+
+@given(strat.seeds(), strat.kinds(), strat.leads())
+@settings(max_examples=4, deadline=None)
+def test_aggregate_parity_sequential_qp(seed, kind, lead):
+    """The ``qp_batched=False`` path dispatches per leaf (stacked
+    leaves vmap the per-layer QP) — same parity bound."""
+    cfg = dataclasses.replace(CFG, qp_batched=False)
+    clients, projs, levels, _ = strat.build_case(
+        seed, 3, kind, "oi", lead, (256, 140), False)
+    want = _agg(clients, projs, levels, "oi", "oracle", cfg=cfg)
+    got = _agg(clients, projs, levels, "oi", "kernel", cfg=cfg)
+    _assert_close(want, got)
+
+
+# --------------------------------------------------------------------------
+# hand-picked regression cases
+# --------------------------------------------------------------------------
 def test_factored_rank_above_one_tile():
     """rank > 128 exercises the rank-axis padding/tiling path."""
-    out_d, in_d, N, rank = 128, 256, 2, 150
-    k, W, V = _layer(31, out_d, in_d, N)
-    P = _proj_of_kind(k, "factored", N, in_d, rank=rank)
+    W, V, _ = strat.build_layer(31, 2, "diag", (128, 256))
+    Ps = [strat.make_projector(jax.random.PRNGKey(50 + i), "factored",
+                               (), 256, rank=150) for i in range(2)]
+    P = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, 0), *Ps)
     got = ops.maecho_gram_auto(W, V, P)
     want = ref.maecho_gram_ref(W, V, P)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -88,101 +187,43 @@ def test_factored_rank_above_one_tile():
 
 def test_small_shapes_fall_back_to_oracle():
     """Below one tile the autos must return the oracle result exactly."""
-    k, W, V = _layer(37, 6, 4, 2)
-    P = _proj_of_kind(k, "full", 2, 4)
+    W, V, P = strat.build_layer(37, 2, "full", (6, 4))
     np.testing.assert_allclose(
         np.asarray(ops.maecho_gram_auto(W, V, P)),
         np.asarray(ref.maecho_gram_ref(W, V, P)), rtol=1e-6)
 
 
-def _mk_clients(seed, dims, n_clients, kind):
-    clients, projs = [], []
-    for i in range(n_clients):
-        k = jax.random.PRNGKey(seed * 100 + i)
-        c, p = [], []
-        for l, (o, d) in enumerate(dims):
-            kk = jax.random.fold_in(k, l)
-            c.append({"W": jax.random.normal(kk, (o, d)) * 0.3,
-                      "b": jax.random.normal(jax.random.fold_in(kk, 1),
-                                             (o,)) * 0.1})
-            if kind == "scalar":
-                pw = jnp.ones(())
-            elif kind == "diag":
-                pw = jax.random.uniform(jax.random.fold_in(kk, 2), (d,))
-            else:
-                r = min(d, 16)
-                U = jnp.linalg.qr(jax.random.normal(
-                    jax.random.fold_in(kk, 2), (d, r)))[0]
-                s = jax.random.uniform(jax.random.fold_in(kk, 3), (r,))
-                pw = ({"U": U, "s": s} if kind == "factored"
-                      else (U * s) @ U.T)
-            p.append({"W": pw, "b": jnp.ones(())})
-        clients.append(c)
-        projs.append(p)
-    return clients, projs
-
-
-# the paper MLP (784-400-200-100-10) and CNN fc/reshaped-conv shapes
-MLP_DIMS = [(400, 784), (200, 400), (100, 200), (10, 100)]
-CNN_DIMS = [(64, 288), (64, 576), (256, 1024), (128, 256), (10, 128)]
-
-
-@pytest.mark.slow
-@pytest.mark.parametrize("kind", KINDS)
-@pytest.mark.parametrize("dims", [MLP_DIMS, CNN_DIMS],
-                         ids=["paper-mlp", "paper-cnn"])
-def test_backend_kernel_matches_oracle(kind, dims):
-    clients, projs = _mk_clients(3, dims, 3, kind)
-    cfg = MAEchoConfig(tau=3, eta=0.5, qp_iters=60)
-    a = maecho_aggregate(clients, projs, cfg, backend="oracle")
-    b = maecho_aggregate(clients, projs, cfg, backend="kernel")
-    for l in range(len(dims)):
-        np.testing.assert_allclose(np.asarray(a[l]["W"]),
-                                   np.asarray(b[l]["W"]), atol=1e-3)
-        np.testing.assert_allclose(np.asarray(a[l]["b"]),
-                                   np.asarray(b[l]["b"]), atol=1e-3)
-
-
 def test_backend_kernel_fori_loop_and_norm():
     """tau > 4 exercises the fori_loop outer path with kernels inside;
     norm=True exercises the fused row-norm."""
-    clients, projs = _mk_clients(5, [(140, 200), (10, 140)], 3, "full")
+    clients, projs, levels, _ = strat.build_case(
+        5, 3, "full", "oi", (), (140, 200), False)
     cfg = MAEchoConfig(tau=6, eta=0.5, qp_iters=60, norm=True, mu=2.0)
-    a = maecho_aggregate(clients, projs, cfg, backend="oracle")
-    b = maecho_aggregate(clients, projs, cfg, backend="kernel")
-    np.testing.assert_allclose(np.asarray(a[0]["W"]),
-                               np.asarray(b[0]["W"]), atol=1e-3)
-
-
-@pytest.mark.parametrize("kind", KINDS)
-def test_backend_kernel_io_convention(kind):
-    """All projector kinds through the "io" transposition: dense is
-    explicitly transposed; factored/diag rely on P's symmetry /
-    elementwise action — pin that contract."""
-    clients, projs = _mk_clients(7, [(150, 256)], 2, kind)
-    clients_io = [[{"W": lay["W"].T, "b": lay["b"]} for lay in c]
-                  for c in clients]
-    cfg = MAEchoConfig(tau=3, eta=0.5, qp_iters=60)
-    a = maecho_aggregate(clients_io, projs, cfg, convention="io",
+    a = maecho_aggregate(clients, projs, cfg, stack_levels=levels,
                          backend="oracle")
-    b = maecho_aggregate(clients_io, projs, cfg, convention="io",
+    b = maecho_aggregate(clients, projs, cfg, stack_levels=levels,
                          backend="kernel")
-    np.testing.assert_allclose(np.asarray(a[0]["W"]),
-                               np.asarray(b[0]["W"]), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(a["W"]),
+                               np.asarray(b["W"]), atol=1e-3)
 
 
-@pytest.mark.slow
-def test_backend_auto_matches_oracle():
-    clients, projs = _mk_clients(9, MLP_DIMS[:2], 3, "factored")
-    cfg = MAEchoConfig(tau=3, eta=0.5, qp_iters=60)
-    a = maecho_aggregate(clients, projs, cfg, backend="oracle")
-    b = maecho_aggregate(clients, projs, cfg, backend="auto")
-    np.testing.assert_allclose(np.asarray(a[0]["W"]),
-                               np.asarray(b[0]["W"]), atol=1e-3)
+def test_backend_stacked_fori_loop():
+    """Stacked leaf under the fori_loop outer path (tau > 4): the
+    stacked kernel grid lives inside the loop body."""
+    clients, projs, levels, _ = strat.build_case(
+        11, 3, "factored", "oi", (3,), (256, 140), False)
+    cfg = MAEchoConfig(tau=6, eta=0.5, qp_iters=60)
+    a = maecho_aggregate(clients, projs, cfg, stack_levels=levels,
+                         backend="oracle")
+    b = maecho_aggregate(clients, projs, cfg, stack_levels=levels,
+                         backend="kernel")
+    np.testing.assert_allclose(np.asarray(a["W"]),
+                               np.asarray(b["W"]), atol=1e-3)
 
 
 def test_backend_rejects_unknown():
-    clients, projs = _mk_clients(11, [(8, 8)], 2, "scalar")
+    clients, projs, levels, _ = strat.build_case(
+        11, 2, "scalar", "oi", (), (48, 64), False)
     with pytest.raises(ValueError):
         maecho_aggregate(clients, projs, MAEchoConfig(tau=1),
                          backend="gpu")
@@ -195,12 +236,13 @@ def test_factor_projection_roundtrip_through_pipeline():
     d, r = 256, 256
     X = jax.random.normal(jax.random.PRNGKey(0), (40, d))
     P = proj.projection_from_features(X, 1e-3)
-    clients, _ = _mk_clients(13, [(140, d)], 2, "scalar")
-    dense = [[{"W": P, "b": jnp.ones(())}] for _ in range(2)]
-    fact = [[{"W": proj.factor_projection(P, r), "b": jnp.ones(())}]
+    clients, _, levels, _ = strat.build_case(
+        13, 2, "scalar", "oi", (), (140, d), False)
+    dense = [{"W": P, "b": jnp.ones(())} for _ in range(2)]
+    fact = [{"W": proj.factor_projection(P, r), "b": jnp.ones(())}
             for _ in range(2)]
     cfg = MAEchoConfig(tau=2, eta=0.5, qp_iters=60)
     a = maecho_aggregate(clients, dense, cfg, backend="kernel")
     b = maecho_aggregate(clients, fact, cfg, backend="kernel")
-    np.testing.assert_allclose(np.asarray(a[0]["W"]),
-                               np.asarray(b[0]["W"]), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(a["W"]),
+                               np.asarray(b["W"]), atol=1e-3)

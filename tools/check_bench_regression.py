@@ -18,10 +18,20 @@ files instead of gating (run it after landing an intentional perf
 change, commit the result).  New rows (present in the bench file,
 absent from the baseline) and retired rows are reported but never
 fail the gate — only a measured slowdown does.
+
+``--check-registered`` additionally cross-checks the perf-suite
+registry (``PERF_SUITES`` in ``benchmarks/run.py``) against the
+baseline file and fails with a clear message when a registered suite
+has no baseline entry at all — the drift mode where a new
+``BENCH_<suite>.json`` is wired into ``run.py`` but nobody committed
+a baseline, so the gate silently never gates it.  CI passes this
+flag; it is opt-in so ad-hoc runs against scratch baselines still
+work.
 """
 from __future__ import annotations
 
 import argparse
+import ast
 import glob
 import json
 import os
@@ -29,6 +39,30 @@ import sys
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), os.pardir,
                                 "benchmarks", "baselines.json")
+DEFAULT_REGISTRY = os.path.join(os.path.dirname(__file__), os.pardir,
+                                "benchmarks", "run.py")
+
+
+def registered_perf_suites(registry_path: str) -> list[str]:
+    """The ``PERF_SUITES`` list from ``benchmarks/run.py``, read via
+    ``ast`` so this tool needs neither jax nor the benchmark imports.
+    Returns [] (with a note) when the registry or the constant is
+    missing — the cross-check then has nothing to enforce."""
+    try:
+        with open(registry_path) as f:
+            tree = ast.parse(f.read())
+    except OSError:
+        print(f"# registry {registry_path!r} not readable; "
+              "skipping registered-suite check")
+        return []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if getattr(tgt, "id", None) == "PERF_SUITES":
+                    return list(ast.literal_eval(node.value))
+    print(f"# no PERF_SUITES in {registry_path!r}; "
+          "skipping registered-suite check")
+    return []
 
 
 def load_latest_rows(bench_path: str,
@@ -107,6 +141,12 @@ def main(argv=None) -> int:
     ap.add_argument("--allow-quick", action="store_true",
                     help="also accept --quick runs (shrunken "
                          "workloads, same row names — off by default)")
+    ap.add_argument("--check-registered", action="store_true",
+                    help="fail when a suite in benchmarks/run.py's "
+                         "PERF_SUITES has no baseline entry at all")
+    ap.add_argument("--registry", default=DEFAULT_REGISTRY,
+                    help="benchmarks/run.py path holding PERF_SUITES "
+                         "(for --check-registered)")
     args = ap.parse_args(argv)
 
     explicit = args.suites is not None
@@ -123,6 +163,17 @@ def main(argv=None) -> int:
             baseline_all = json.load(f)
 
     failures: list[str] = []
+    if args.check_registered and not args.update_baseline:
+        for suite in registered_perf_suites(args.registry):
+            if suite not in baseline_all:
+                failures.append(
+                    f"suite {suite!r} is registered in PERF_SUITES "
+                    f"({args.registry}) but has NO baseline entry in "
+                    f"{args.baseline} — run `python -m benchmarks.run "
+                    f"--only {suite}` then `python tools/"
+                    f"check_bench_regression.py --suites {suite} "
+                    f"--update-baseline` and commit the result")
+                print(f"  MISSING BASELINE  {suite}")
     missing: list[str] = []
     for suite in suites:
         path = os.path.join(args.bench_dir, f"BENCH_{suite}.json")

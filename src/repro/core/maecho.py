@@ -63,6 +63,27 @@ Backends — the ``backend`` argument of :func:`maecho_aggregate`:
     the single-device ``"auto"`` dispatch.  Pass the mesh via
     ``maecho_aggregate(..., mesh=...)`` (default: a 1-D mesh over
     every visible device).
+  - ``"sharded2d"``: the 2-D (out × in) mesh-sharded pipeline.
+    Eligible leaves (``rules.sharded_ok2d`` — BOTH trailing dims'
+    tile counts divide their axis group) split out-rows over
+    ``MAEchoConfig.mesh_axis`` AND in-columns over
+    ``MAEchoConfig.mesh_in_axis`` ("model"): each device forms only
+    its (out/osz, in/isz) residual tile, partial Grams are psum'd
+    over BOTH axis groups in ONE collective per leaf per outer
+    iteration, and the applies stay row/col-local.  This covers
+    leaves whose out-dim alone is too small to span the fleet — the
+    device count factors as osz × isz instead of dividing the
+    out-tiles 1-D.  Leaves that fail the 2-D gate degrade to the 1-D
+    ``"sharded"`` shard over ``mesh_axis``, then to the ``"auto"``
+    rule (each fallback warned once).
+
+Routing is compiled ONCE per (treedef, shapes, conventions,
+stack_levels, backend, mesh, config) by ``core.plan.compile_plan``
+into a frozen ``AggPlan`` — one ``LeafPlan`` per leaf carrying the
+route, kernel layout, effective tile size and psum axes.  The outer
+loop below is a pure executor over that plan, and
+:func:`dispatch_summary` is a view of the same compiled object, so
+the coverage it reports is definitionally the coverage that runs.
 
 Ragged participation (``maecho_aggregate(..., client_mask=...)``): an
 optional per-leaf boolean client mask rides the batched QP's validity
@@ -104,7 +125,9 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import plan as plan_mod
 from repro.core import qp as qp_mod
+from repro.core.plan import AggPlan, LeafPlan, compile_plan
 from repro.utils import trees
 
 Pytree = Any
@@ -121,7 +144,8 @@ class MAEchoConfig:
     init: str = "average"         # average | first | random
     eps: float = 1e-12
     qp_batched: bool = True       # one stacked PGD solve per outer iter
-    mesh_axis: str = "data"       # shard_map axis for backend="sharded"
+    mesh_axis: str = "data"       # out-row shard axis ("sharded"/"2d")
+    mesh_in_axis: str = "model"   # in-column shard axis ("sharded2d")
     # kernel tile edge for the (non-sharded) streaming pipeline;
     # 0 = ops.DEFAULT_BLOCK (128, the TPU-safe MXU tile).  Bigger
     # blocks shrink the grid — the interpret-mode benches use 512 to
@@ -177,84 +201,6 @@ def _qp_alpha(G, cfg: MAEchoConfig, mask=None):
     return qp_mod.solve_qp(G, cfg.C, iters=cfg.qp_iters, mask=mask)
 
 
-def _kernel_eligible(W, P, levels: int = 0) -> bool:
-    """Leaf shapes the fused pipelines handle: a 2-D weight (plus
-    ``levels`` leading stacked-layer axes) with a scalar / diagonal /
-    dense / factored projector whose kind axes shift by the same
-    ``levels``."""
-    if getattr(W, "ndim", 0) != 2 + levels:
-        return False
-    if isinstance(P, dict):
-        return (set(P) == {"U", "s"}
-                and getattr(P["U"], "ndim", 0) == 3 + levels)
-    return getattr(P, "ndim", -1) in (1 + levels, 2 + levels, 3 + levels)
-
-
-def _kernel_dims(W, convention: str) -> tuple:
-    """(out_d, in_d) of a leaf in the "oi"-native kernel layout — the
-    trailing two axes, swapped for "io" (stack axes don't matter)."""
-    out_d, in_d = W.shape[-2:]
-    return (out_d, in_d) if convention == "oi" else (in_d, out_d)
-
-
-def _use_kernel(W, P, backend: str, levels: int = 0) -> bool:
-    """Does this leaf take the fused streaming pipeline?  Must agree
-    between the gram and apply halves — both recompute it from the
-    same static shapes.  ``backend="sharded"`` lands here for leaves
-    that failed :func:`_use_sharded` — they take the "auto" rule (the
-    single-device kernel path when big enough to tile)."""
-    if backend == "oracle" or not _kernel_eligible(W, P, levels):
-        return False
-    from repro.kernels.ops import DEFAULT_BLOCK
-    return backend == "kernel" or min(W.shape[-2:]) >= DEFAULT_BLOCK
-
-
-def _use_sharded(W, P, backend: str, mesh, convention: str,
-                 axis, levels: int = 0) -> bool:
-    """Does this leaf take the out-dim mesh-sharded pipeline?  Needs
-    ``backend="sharded"``, a mesh that actually carries the configured
-    axis, a kernel-eligible leaf (2-D plus ``levels`` stack axes), and
-    even block-granular divisibility of the (kernel-layout) out-dim
-    over the axis (``ops.sharded_ok`` — the sharding rules' ``_ok``
-    contract; it warns once on the fallback).  Anything else falls
-    back through :func:`_use_kernel` to the single-device path.
-    Static shapes only — the gram and apply halves must agree."""
-    if backend != "sharded" or mesh is None \
-            or not _kernel_eligible(W, P, levels):
-        return False
-    names = (axis,) if isinstance(axis, str) else tuple(axis)
-    if any(n not in mesh.shape for n in names):
-        return False               # shard_map would KeyError the name
-    from repro.kernels import ops
-    out_d, in_d = _kernel_dims(W, convention)
-    return ops.sharded_ok(out_d, in_d, ops.axis_size_of(mesh, axis),
-                          warn=True)
-
-
-def _stacked_route(W, P, cfg: MAEchoConfig, convention: str,
-                   backend: str, mesh, levels: int):
-    """Compute path of a stacked leaf: ``"sharded"`` | ``"kernel"`` |
-    ``None`` (the vmapped-oracle fallback).  The layer axes fold into
-    the kernel grid, so eligibility is exactly the per-layer rule on
-    the trailing (out, in) dims; an oracle fallback under a non-oracle
-    backend is surfaced once via ``ops.fallback_warn``."""
-    if _use_sharded(W, P, backend, mesh, convention, cfg.mesh_axis,
-                    levels):
-        return "sharded"
-    if _use_kernel(W, P, backend, levels):
-        return "kernel"
-    if backend not in ("oracle", "auto"):
-        # "auto" documents 'oracle otherwise' — only a FORCED fast
-        # path degrading is silent-degradation worth a warning (the
-        # 2-D dispatch draws the same line)
-        from repro.kernels import ops
-        ops.fallback_warn(
-            f"stacked leaf (shape={tuple(W.shape)}, levels={levels}) "
-            f"ineligible for backend={backend!r}: falling back to the "
-            f"vmapped jnp oracle")
-    return None
-
-
 def _flatten_stack(W, V, P, levels: int):
     """Collapse ``levels`` leading stacked-layer axes into one flat L
     axis for the stacked kernel grid.  Returns ``(Wf, Vf, Pf, lead)``
@@ -286,31 +232,29 @@ def _to_kernel_layout(W, V, P, convention: str, levels: int = 0):
     return jnp.swapaxes(W, -1, -2), jnp.swapaxes(V, -1, -2), Pk
 
 
-def _block_of(cfg: MAEchoConfig) -> int:
-    from repro.kernels.ops import DEFAULT_BLOCK
-
-    return cfg.kernel_block or DEFAULT_BLOCK
-
-
-def _leaf_gram_kernel(W, V, P, cfg: MAEchoConfig, convention: str):
+def _leaf_gram_kernel(W, V, P, cfg: MAEchoConfig, convention: str,
+                      block: int):
     """Gram half of the fused streaming pipeline: the Eq. 6 Gram plus
     the padded-operand reuse context (padding/kind dispatch and the
     factored-path compressed-residual sharing live in
-    ``ops.maecho_streaming_gram``)."""
+    ``ops.maecho_streaming_gram``).  ``block`` is the leaf plan's
+    effective tile edge — the plan is the one source of the tiling,
+    so the summary can never drift from what executes."""
     from repro.kernels import ops
 
     Wk, Vk, Pk = _to_kernel_layout(W, V, P, convention)
-    return ops.maecho_streaming_gram(Wk, Vk, Pk, block=_block_of(cfg))
+    return ops.maecho_streaming_gram(Wk, Vk, Pk, block=block)
 
 
-def _leaf_apply_kernel(alpha, ctx, cfg: MAEchoConfig, convention: str):
+def _leaf_apply_kernel(alpha, ctx, cfg: MAEchoConfig, convention: str,
+                       block: int):
     """Update half of the fused streaming pipeline: Eq. 7 + Eq. 11 on
     the context from :func:`_leaf_gram_kernel`."""
     from repro.kernels import ops
 
     W_new, V_new = ops.maecho_streaming_apply(
         alpha, ctx, eta=cfg.eta, frac=cfg.mu / (1.0 + cfg.mu),
-        norm=cfg.norm, eps=cfg.eps, block=_block_of(cfg))
+        norm=cfg.norm, eps=cfg.eps, block=block)
     if convention == "io":
         return W_new.T, jnp.swapaxes(V_new, 1, 2)
     return W_new, V_new
@@ -328,6 +272,34 @@ def _leaf_gram_sharded(W, V, P, cfg: MAEchoConfig, convention: str,
                                    axis=cfg.mesh_axis)
 
 
+def _leaf_gram_sharded2d(W, V, P, cfg: MAEchoConfig, convention: str,
+                         mesh):
+    """Gram half of the 2-D (out × in) sharded pipeline: one partial
+    Gram per (out, in) tile, psum'd over BOTH axis groups at once."""
+    from repro.kernels import ops
+
+    Wk, Vk, Pk = _to_kernel_layout(W, V, P, convention)
+    return ops.maecho_sharded2d_gram(Wk, Vk, Pk, mesh=mesh,
+                                     axis_out=cfg.mesh_axis,
+                                     axis_in=cfg.mesh_in_axis)
+
+
+def _leaf_apply_sharded2d(alpha, ctx, cfg: MAEchoConfig,
+                          convention: str, mesh):
+    """Update half of the 2-D sharded pipeline: Eq. 7 + Eq. 11 stay
+    row/col-local — no collectives (the gram's two-axis psum is the
+    leaf's only one per outer iteration)."""
+    from repro.kernels import ops
+
+    W_new, V_new = ops.maecho_sharded2d_apply(
+        alpha, ctx, mesh=mesh, axis_out=cfg.mesh_axis,
+        axis_in=cfg.mesh_in_axis, eta=cfg.eta,
+        frac=cfg.mu / (1.0 + cfg.mu), norm=cfg.norm, eps=cfg.eps)
+    if convention == "io":
+        return W_new.T, jnp.swapaxes(V_new, 1, 2)
+    return W_new, V_new
+
+
 def _leaf_apply_sharded(alpha, ctx, cfg: MAEchoConfig, convention: str,
                         mesh):
     """Update half of the mesh-sharded pipeline: Eq. 7 + Eq. 11 run
@@ -343,28 +315,34 @@ def _leaf_apply_sharded(alpha, ctx, cfg: MAEchoConfig, convention: str,
 
 
 def _leaf_gram_stacked(W, V, P, cfg: MAEchoConfig, convention: str,
-                       route: str, mesh, levels: int):
-    """Gram half for a stacked leaf on the kernel or sharded pipeline:
-    the ``levels`` leading layer axes are flattened into the kernel
-    grid's outer dimension — ONE launch (and, sharded, ONE psum
-    carrying the (L, N, N) stack) covers every scanned layer.  Returns
-    ``(G, ctx)`` with G carrying the original leading axes before its
-    trailing (N, N), matching the oracle-vmap layout."""
+                       route: str, mesh, levels: int,
+                       block: int = 0):
+    """Gram half for a stacked leaf on the kernel or sharded
+    pipelines: the ``levels`` leading layer axes are flattened into
+    the kernel grid's outer dimension — ONE launch (and, sharded, ONE
+    psum carrying the (L, N, N) stack) covers every scanned layer.
+    ``route`` is the leaf plan's: "stacked" | "sharded" | "sharded2d".
+    Returns ``(G, ctx)`` with G carrying the original leading axes
+    before its trailing (N, N), matching the oracle-vmap layout."""
     from repro.kernels import ops
 
     Wf, Vf, Pf, lead = _flatten_stack(W, V, P, levels)
     Wk, Vk, Pk = _to_kernel_layout(Wf, Vf, Pf, convention, levels=1)
-    if route == "sharded":
+    if route == "sharded2d":
+        G, ctx = ops.maecho_sharded2d_gram_stacked(
+            Wk, Vk, Pk, mesh=mesh, axis_out=cfg.mesh_axis,
+            axis_in=cfg.mesh_in_axis)
+    elif route == "sharded":
         G, ctx = ops.maecho_sharded_gram_stacked(Wk, Vk, Pk, mesh=mesh,
                                                  axis=cfg.mesh_axis)
     else:
         G, ctx = ops.maecho_streaming_gram_stacked(
-            Wk, Vk, Pk, block=_block_of(cfg))
+            Wk, Vk, Pk, block=block or ops.DEFAULT_BLOCK)
     return G.reshape(lead + G.shape[-2:]), ("stk", route, lead, ctx)
 
 
 def _leaf_apply_stacked(alpha, ctx, cfg: MAEchoConfig,
-                        convention: str, mesh):
+                        convention: str, mesh, block: int = 0):
     """Update half for a stacked leaf: per-layer Eq. 7 + Eq. 11 from
     the flattened-grid context.  ``alpha`` carries the leaf's leading
     stack axes before its trailing N (the QP batch layout)."""
@@ -374,12 +352,16 @@ def _leaf_apply_stacked(alpha, ctx, cfg: MAEchoConfig,
     af = alpha.reshape((-1,) + alpha.shape[-1:])
     kw = dict(eta=cfg.eta, frac=cfg.mu / (1.0 + cfg.mu), norm=cfg.norm,
               eps=cfg.eps)
-    if route == "sharded":
+    if route == "sharded2d":
+        Wn, Vn = ops.maecho_sharded2d_apply_stacked(
+            af, inner, mesh=mesh, axis_out=cfg.mesh_axis,
+            axis_in=cfg.mesh_in_axis, **kw)
+    elif route == "sharded":
         Wn, Vn = ops.maecho_sharded_apply_stacked(
             af, inner, mesh=mesh, axis=cfg.mesh_axis, **kw)
     else:
         Wn, Vn = ops.maecho_streaming_apply_stacked(
-            af, inner, block=_block_of(cfg), **kw)
+            af, inner, block=block or ops.DEFAULT_BLOCK, **kw)
     if convention == "io":
         Wn, Vn = jnp.swapaxes(Wn, -1, -2), jnp.swapaxes(Vn, -1, -2)
     return (Wn.reshape(lead + Wn.shape[-2:]),
@@ -420,111 +402,91 @@ def _leaf_apply_oracle(W, V, P, R, alpha, cfg: MAEchoConfig,
     return W_new, V_new
 
 
-def _leaf_step(W, V, P, cfg: MAEchoConfig, convention: str,
-               backend: str = "oracle", mesh=None, mask=None):
-    """One Algorithm-1 iteration for a single layer leaf (the
-    sequential-QP path: gram → own PGD solve → apply).
-
-    W: (...,);  V: (N, ...);  P: (N, [in, in] | [in] | []).
-    Returns (W', V').
-    """
-    if _use_sharded(W, P, backend, mesh, convention, cfg.mesh_axis):
-        G, ctx = _leaf_gram_sharded(W, V, P, cfg, convention, mesh)
-        return _leaf_apply_sharded(_qp_alpha(G, cfg, mask), ctx, cfg,
-                                   convention, mesh)
-    if _use_kernel(W, P, backend):
-        G, ctx = _leaf_gram_kernel(W, V, P, cfg, convention)
-        return _leaf_apply_kernel(_qp_alpha(G, cfg, mask), ctx, cfg,
-                                  convention)
-    G, R = _leaf_gram_oracle(W, V, P, convention)
-    return _leaf_apply_oracle(W, V, P, R, _qp_alpha(G, cfg, mask), cfg,
-                              convention)
-
-
-def _dispatch_leaf(W, V, P, cfg: MAEchoConfig, convention: str,
-                   levels: int = 0, backend: str = "oracle", mesh=None,
-                   mask=None):
-    """``levels`` leading stacked-layer axes fold into the kernel grid
-    when the leaf is pipeline-eligible (one launch covers all scanned
-    layers) and are vmapped over the oracle otherwise; either way the
-    QP is solved per scanned layer, matching the paper's per-layer
-    loop.  The participation mask is shared by every scanned layer of
-    a leaf."""
-    if levels > 0:
-        route = _stacked_route(W, P, cfg, convention, backend, mesh,
-                               levels)
-        if route is not None:
-            G, ctx = _leaf_gram_stacked(W, V, P, cfg, convention,
-                                        route, mesh, levels)
-            Gf = G.reshape((-1,) + G.shape[-2:])
-            alpha = jax.vmap(lambda g: _qp_alpha(g, cfg, mask))(Gf)
-            alpha = alpha.reshape(G.shape[:-2] + alpha.shape[-1:])
-            return _leaf_apply_stacked(alpha, ctx, cfg, convention,
-                                       mesh)
-        # V/P: (N, L, ...) -> vmap over L (axis 1 of V/P, axis 0 of W)
-        return jax.vmap(
-            lambda w, v, p: _dispatch_leaf(w, v, p, cfg, convention,
-                                           levels - 1, "oracle",
-                                           mask=mask),
-            in_axes=(0, 1, 1), out_axes=(0, 1))(W, V, P)
-    return _leaf_step(W, V, P, cfg, convention, backend, mesh, mask)
-
-
 # --------------------------------------------------------------------------
-# batched QP: gram/apply leaf dispatch around one stacked PGD solve
+# the executor: per-leaf gram/apply keyed purely off the compiled plan
 # --------------------------------------------------------------------------
-def _leaf_gram(W, V, P, cfg: MAEchoConfig, convention: str,
-               levels: int = 0, backend: str = "oracle", mesh=None):
-    """Gram phase of the batched outer iteration.
+def _leaf_gram(W, V, P, lp: LeafPlan, cfg: MAEchoConfig,
+               convention: str, mesh=None):
+    """Gram phase for one leaf, dispatched on its compiled
+    ``LeafPlan.route`` — no shape inspection happens here, the plan is
+    the single source of truth.
 
     Returns ``(G, ctx)``: G carries any stacked-layer axes in front of
-    its trailing (N, N) — the caller flattens those into the QP batch
-    axis — and ``ctx`` is the per-leaf reuse payload for
+    its trailing (N, N) — the batched caller flattens those into the
+    QP batch axis — and ``ctx`` is the per-leaf reuse payload for
     :func:`_leaf_apply` (the oracle residual, or the kernel/sharded
-    pipeline's padded-operand context).  An eligible stacked leaf
-    folds its layer axes into the kernel grid (one launch, and on the
-    sharded route one (L, N, N) psum, for all L scanned layers);
-    ineligible ones vmap the oracle gram.  Either way a leaf with L
-    scanned layers contributes L rows to the batch."""
-    if levels > 0:
-        route = _stacked_route(W, P, cfg, convention, backend, mesh,
-                               levels)
-        if route is not None:
-            return _leaf_gram_stacked(W, V, P, cfg, convention, route,
-                                      mesh, levels)
-        return jax.vmap(
-            lambda w, v, p: _leaf_gram(w, v, p, cfg, convention,
-                                       levels - 1, "oracle"),
-            in_axes=(0, 1, 1), out_axes=0)(W, V, P)
-    if _use_sharded(W, P, backend, mesh, convention, cfg.mesh_axis):
+    pipelines' padded-operand context)."""
+    route = lp.route
+    if route == "oracle":
+        if lp.levels > 0:
+            # any number of leading stacked-layer axes collapses to
+            # ONE flat scan axis before a single vmap (nested vmaps
+            # over the oracle trip XLA:CPU's simplifier on dense
+            # projector contractions); maecho_aggregate pre-flattens
+            # multi-level stacks, but direct executor callers (the
+            # dryrun driver) hand levels >= 2 leaves straight in
+            Wf, Vf, Pf, lead = _flatten_stack(W, V, P, lp.levels)
+            G, R = jax.vmap(
+                lambda w, v, p: _leaf_gram_oracle(w, v, p, convention),
+                in_axes=(0, 1, 1), out_axes=0)(Wf, Vf, Pf)
+            return G.reshape(lead + G.shape[1:]), R
+        return _leaf_gram_oracle(W, V, P, convention)
+    if lp.levels > 0:
+        return _leaf_gram_stacked(W, V, P, cfg, convention, route,
+                                  mesh, lp.levels, lp.block)
+    if route == "sharded2d":
+        return _leaf_gram_sharded2d(W, V, P, cfg, convention, mesh)
+    if route == "sharded":
         return _leaf_gram_sharded(W, V, P, cfg, convention, mesh)
-    if _use_kernel(W, P, backend):
-        return _leaf_gram_kernel(W, V, P, cfg, convention)
-    return _leaf_gram_oracle(W, V, P, convention)
+    return _leaf_gram_kernel(W, V, P, cfg, convention, lp.block)
 
 
-def _leaf_apply(W, V, P, ctx, alpha, cfg: MAEchoConfig,
-                convention: str, levels: int = 0,
-                backend: str = "oracle", mesh=None):
-    """Apply phase of the batched outer iteration: scatter this leaf's
-    τ rows of the stacked solve back through Eq. 7 / Eq. 11.  ``alpha``
-    carries the leaf's stacked-layer axes in front of its trailing N,
-    mirroring the gram layout."""
-    if levels > 0:
-        if isinstance(ctx, tuple) and len(ctx) == 4 and ctx[0] == "stk":
-            return _leaf_apply_stacked(alpha, ctx, cfg, convention,
-                                       mesh)
-        return jax.vmap(
-            lambda w, v, p, r, a: _leaf_apply(w, v, p, r, a, cfg,
-                                              convention, levels - 1,
-                                              "oracle"),
-            in_axes=(0, 1, 1, 0, 0), out_axes=(0, 1))(W, V, P, ctx,
-                                                      alpha)
-    if _use_sharded(W, P, backend, mesh, convention, cfg.mesh_axis):
+def _leaf_apply(W, V, P, ctx, alpha, lp: LeafPlan, cfg: MAEchoConfig,
+                convention: str, mesh=None):
+    """Apply phase for one leaf: scatter its rows of the stacked solve
+    back through Eq. 7 / Eq. 11 on the route the plan compiled.
+    ``alpha`` carries the leaf's stacked-layer axes in front of its
+    trailing N, mirroring the gram layout."""
+    route = lp.route
+    if route == "oracle":
+        if lp.levels > 0:
+            # ctx is the flat (L, N, ...) residual stack from
+            # _leaf_gram; alpha carries the original lead axes
+            Wf, Vf, Pf, lead = _flatten_stack(W, V, P, lp.levels)
+            af = alpha.reshape((-1,) + alpha.shape[-1:])
+            Wn, Vn = jax.vmap(
+                lambda w, v, p, r, a: _leaf_apply_oracle(
+                    w, v, p, r, a, cfg, convention),
+                in_axes=(0, 1, 1, 0, 0), out_axes=(0, 1))(Wf, Vf, Pf,
+                                                          ctx, af)
+            return (Wn.reshape(lead + Wn.shape[1:]),
+                    Vn.reshape(Vn.shape[:1] + lead + Vn.shape[2:]))
+        return _leaf_apply_oracle(W, V, P, ctx, alpha, cfg, convention)
+    if lp.levels > 0:
+        return _leaf_apply_stacked(alpha, ctx, cfg, convention, mesh,
+                                   lp.block)
+    if route == "sharded2d":
+        return _leaf_apply_sharded2d(alpha, ctx, cfg, convention, mesh)
+    if route == "sharded":
         return _leaf_apply_sharded(alpha, ctx, cfg, convention, mesh)
-    if _use_kernel(W, P, backend):
-        return _leaf_apply_kernel(alpha, ctx, cfg, convention)
-    return _leaf_apply_oracle(W, V, P, ctx, alpha, cfg, convention)
+    return _leaf_apply_kernel(alpha, ctx, cfg, convention, lp.block)
+
+
+def _leaf_sequential(W, V, P, lp: LeafPlan, cfg: MAEchoConfig,
+                     convention: str, mesh=None, mask=None):
+    """One Algorithm-1 iteration for a single leaf on the sequential-QP
+    path (``qp_batched=False``): gram → own PGD solve (per scanned
+    layer for stacked leaves, matching the paper's per-layer loop) →
+    apply.  The participation mask is shared by every scanned layer.
+    Returns (W', V')."""
+    G, ctx = _leaf_gram(W, V, P, lp, cfg, convention, mesh)
+    if lp.levels > 0:
+        Gf = G.reshape((-1,) + G.shape[-2:])
+        alpha = jax.vmap(lambda g: _qp_alpha(g, cfg, mask))(Gf)
+        alpha = alpha.reshape(G.shape[:-2] + alpha.shape[-1:])
+    else:
+        alpha = _qp_alpha(G, cfg, mask)
+    return _leaf_apply(W, V, P, ctx, alpha, lp, cfg, convention, mesh)
 
 
 # --------------------------------------------------------------------------
@@ -557,11 +519,14 @@ def init_global(client_weights: list[Pytree], how: str,
     raise ValueError(f"unknown init {how!r}")
 
 
-@partial(jax.jit, static_argnames=("cfg", "convention", "levels",
-                                   "backend", "mesh"))
+@partial(jax.jit, static_argnames=("cfg", "convention", "plan",
+                                   "mesh"))
 def _maecho_jit(W0, V0, P, cfg: MAEchoConfig, convention: str,
-                levels: tuple, backend: str = "oracle", mesh=None,
-                masks=None):
+                plan: AggPlan, mesh=None, masks=None):
+    """The pure executor: runs the τ-loop over the COMPILED plan —
+    every per-leaf decision was already frozen into ``plan.leaves``
+    (one :class:`LeafPlan` per flattened leaf, same order), so the
+    loop body below contains zero routing logic."""
     def outer(_, state):
         W, V = state
         flatW, treedef = jax.tree_util.tree_flatten(W)
@@ -576,9 +541,8 @@ def _maecho_jit(W0, V0, P, cfg: MAEchoConfig, convention: str,
             # aggregate call, so stack_grams degenerates to a pure
             # concat here (its padding serves the ragged case).
             grams, ctxs = [], []
-            for w, v, p, lv in zip(flatW, flatV, flatP, levels):
-                g, ctx = _leaf_gram(w, v, p, cfg, convention, lv,
-                                    backend, mesh)
+            for w, v, p, lp in zip(flatW, flatV, flatP, plan.leaves):
+                g, ctx = _leaf_gram(w, v, p, lp, cfg, convention, mesh)
                 grams.append(g)
                 ctxs.append(ctx)
             Gstack, n_valid = qp_mod.stack_grams(grams)
@@ -598,19 +562,19 @@ def _maecho_jit(W0, V0, P, cfg: MAEchoConfig, convention: str,
                     mask=jnp.concatenate(rows, 0))
             # Phase 3: … scattered back through each leaf's Eq. 7/11.
             out, ofs = [], 0
-            for w, v, p, lv, ctx, g in zip(flatW, flatV, flatP, levels,
-                                           ctxs, grams):
+            for w, v, p, lp, ctx, g in zip(flatW, flatV, flatP,
+                                           plan.leaves, ctxs, grams):
                 cnt = math.prod(g.shape[:-2])
                 a = alphas[ofs:ofs + cnt].reshape(
                     g.shape[:-2] + alphas.shape[-1:])
                 ofs += cnt
-                out.append(_leaf_apply(w, v, p, ctx, a, cfg,
-                                       convention, lv, backend, mesh))
+                out.append(_leaf_apply(w, v, p, ctx, a, lp, cfg,
+                                       convention, mesh))
         else:
-            out = [_dispatch_leaf(w, v, p, cfg, convention, lv, backend,
-                                  mesh, m)
-                   for w, v, p, lv, m in zip(flatW, flatV, flatP,
-                                             levels, flatM)]
+            out = [_leaf_sequential(w, v, p, lp, cfg, convention,
+                                    mesh, m)
+                   for w, v, p, lp, m in zip(flatW, flatV, flatP,
+                                             plan.leaves, flatM)]
         if masks is not None:
             # non-participants contribute nothing (α = 0 via the QP
             # mask) and their anchors stay put — the run matches
@@ -637,57 +601,39 @@ def dispatch_summary(W0: Pytree, P: Pytree, levels_tree: Pytree,
                      cfg: MAEchoConfig = MAEchoConfig(),
                      convention: str = "oi", backend: str = "oracle",
                      mesh=None):
-    """Per-leaf compute-path report: which backend each leaf actually
-    takes under the given dispatch inputs — the visibility companion
-    to ``ops.fallback_warn`` (a requested fast path silently degrading
-    to the oracle is the failure mode both guard).
+    """Per-leaf compute-path report: a VIEW over the compiled
+    :class:`AggPlan` — the same object the executor dispatches on, so
+    the route reported here is definitionally the route that runs
+    (the pre-plan implementation maintained a second copy of the
+    routing rules, which could drift).
 
     ``W0`` / ``P`` are the global-weight and *stacked* (leading client
     axis) projector trees — arrays or ``jax.ShapeDtypeStruct``s both
-    work, dispatch is static-shape-only.  Returns ``(per_leaf,
+    work, routing is static-shape-only.  Returns ``(per_leaf,
     counts)``: ``per_leaf`` is a list of ``(path, levels, route)``
-    with route in {"oracle", "kernel", "sharded"}; ``counts`` maps
-    route -> leaf count.
+    with route in ``plan.ROUTES`` ({"oracle", "kernel", "stacked",
+    "sharded", "sharded2d"}); ``counts`` maps route -> leaf count.
     """
-    treedef = jax.tree_util.tree_structure(W0)
-    paths = [p for p, _ in trees.tree_paths(W0)]
-    flatW = jax.tree_util.tree_leaves(W0)
-    flatP = treedef.flatten_up_to(P)
-    flatL = jax.tree_util.tree_leaves(levels_tree)
-    from repro.kernels.ops import DEFAULT_BLOCK
-
-    per_leaf = []
-    for path, w, p, lv in zip(paths, flatW, flatP, flatL):
-        if lv > 0:
-            route = _stacked_route(w, p, cfg, convention, backend,
-                                   mesh, lv) or "oracle"
-        elif _use_sharded(w, p, backend, mesh, convention,
-                          cfg.mesh_axis):
-            route = "sharded"
-        elif _use_kernel(w, p, backend):
-            route = "kernel"
-        else:
-            route = "oracle"
-        # a "kernel"-routed leaf below one tile runs the jnp oracle
-        # inside the streaming wrappers (backend="kernel" forces the
-        # route, not the tiling) — report what actually executes
-        if route == "kernel" and min(w.shape[-2:]) < DEFAULT_BLOCK:
-            route = "oracle"
-        per_leaf.append((path, lv, route))
-    counts: dict = {}
-    for _, _, route in per_leaf:
-        counts[route] = counts.get(route, 0) + 1
-    return per_leaf, counts
+    plan = compile_plan(W0, P, levels_tree, cfg, convention, backend,
+                        mesh)
+    return plan.per_leaf(), plan.route_counts()
 
 
-def _default_mesh(axis_name: str):
-    """1-D mesh over every visible device — the ``backend="sharded"``
+def _default_mesh(axis_name: str, in_axis_name: Optional[str] = None):
+    """Mesh over every visible device — the sharded backends'
     convenience default, so ``maecho_backend="sharded"`` works without
-    explicit mesh plumbing (pass a real mesh for production)."""
+    explicit mesh plumbing (pass a real mesh for production).  With
+    ``in_axis_name`` (the ``"sharded2d"`` default) the mesh carries a
+    trivial size-1 in-axis: all devices stay on the out-row axis, and
+    callers that want real 2-D spans pass their own factored mesh."""
     import numpy as np
     from jax.sharding import Mesh
 
-    return Mesh(np.asarray(jax.devices()), (axis_name,))
+    devs = np.asarray(jax.devices())
+    if in_axis_name is None:
+        return Mesh(devs, (axis_name,))
+    return Mesh(devs.reshape(len(devs), 1),
+                (axis_name, in_axis_name))
 
 
 def _normalize_client_mask(client_mask, W0, n_clients: int):
@@ -748,12 +694,18 @@ def maecho_aggregate(
                     into the kernel grid; projector leaves must carry
                     the same leading axes.
     backend:        ``"oracle"`` | ``"kernel"`` | ``"auto"`` |
-                    ``"sharded"`` — the jnp reference path, the fused
-                    streaming Pallas pipeline, or its out-dim
-                    mesh-sharded form (module docstring).
+                    ``"sharded"`` | ``"sharded2d"`` — the jnp
+                    reference path, the fused streaming Pallas
+                    pipeline, its out-dim mesh-sharded form, or the
+                    2-D (out × in) multi-axis shard (module
+                    docstring).  Unknown strings raise with the full
+                    choice list.
     mesh:           ``jax.sharding.Mesh`` carrying ``cfg.mesh_axis``
                     for ``backend="sharded"`` (default: a 1-D mesh
-                    over every visible device).  Ignored otherwise.
+                    over every visible device) — plus
+                    ``cfg.mesh_in_axis`` for ``backend="sharded2d"``
+                    (default: all devices on the out-row axis and a
+                    trivial size-1 in-axis).  Ignored otherwise.
     client_mask:    optional ragged-participation mask — one (N,)
                     boolean vector, or a pytree of them matching the
                     weight structure (per-leaf client subsets).
@@ -762,11 +714,12 @@ def maecho_aggregate(
                     aggregating the subset alone.  At least one client
                     must be masked in per leaf.
     """
-    if backend not in ("oracle", "kernel", "auto", "sharded"):
-        raise ValueError(f"unknown backend {backend!r}")
+    plan_mod.validate_backend(backend)
     if backend == "sharded" and mesh is None:
         mesh = _default_mesh(cfg.mesh_axis)
-    if backend != "sharded":
+    if backend == "sharded2d" and mesh is None:
+        mesh = _default_mesh(cfg.mesh_axis, cfg.mesh_in_axis)
+    if backend not in ("sharded", "sharded2d"):
         mesh = None                 # keep the jit cache key canonical
     if projections is None:
         projections = default_projections(client_weights)
@@ -809,8 +762,13 @@ def maecho_aggregate(
         V0 = jax.tree_util.tree_unflatten(treedef, fV)
         P = jax.tree_util.tree_unflatten(treedef, fP)
     run_levels = tuple(min(lv, 1) for lv in levels) if multi else levels
-    W, V = _maecho_jit(W0, V0, P, cfg, convention, run_levels, backend,
-                       mesh, masks)
+    # the compile-once step: routing for every leaf is frozen here
+    # (memoized — repeated aggregations over the same model reuse the
+    # identical plan object AND therefore the executor's jit cache)
+    plan = compile_plan(
+        W0, P, jax.tree_util.tree_unflatten(treedef, list(run_levels)),
+        cfg, convention, backend, mesh)
+    W, V = _maecho_jit(W0, V0, P, cfg, convention, plan, mesh, masks)
     if multi:
         W = jax.tree_util.tree_unflatten(treedef, [
             w.reshape(lead + w.shape[1:]) if lv > 1 else w

@@ -365,7 +365,14 @@ def aggregate_llm(cfg: ModelConfig, client_params: list,
     Pallas pipeline; smoke-scale models (dims below one 128-tile)
     degrade to the oracle with identical results.  Pass
     ``backend="sharded"`` plus a ``mesh`` to additionally split leaf
-    out-rows across devices (one psum per leaf per outer iteration).
+    out-rows across devices (one psum per leaf per outer iteration),
+    or ``backend="sharded2d"`` plus a mesh carrying both
+    ``macfg.mesh_axis`` and ``macfg.mesh_in_axis`` to shard the
+    residual 2-D (out × in) — the route for attention/MLP leaves
+    whose out-dim alone cannot span the fleet (still one psum, taken
+    over both axis groups).  Routing is compiled once per model shape
+    into an ``AggPlan`` (``core.plan``); inspect it with
+    ``core.maecho.dispatch_summary`` or ``dryrun_agg --backend ...``.
     """
     if client_projs is None:
         client_projs = [default_llm_projections(cfg, p)

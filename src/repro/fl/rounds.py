@@ -13,7 +13,9 @@ outer iteration stacks all layers' Gram matrices and issues a single
 vmapped PGD solve instead of one QP per layer — the round loop never
 serialises over leaves.  ``MultiRoundConfig.maecho_backend`` selects
 the per-leaf compute path (``"oracle"`` | ``"kernel"`` | ``"auto"`` |
-``"sharded"``, see ``core.maecho``); for ``"sharded"`` pass the mesh
+``"sharded"`` | ``"sharded2d"``, see ``core.maecho`` — per-leaf
+routing is compiled once per model shape into ``core.plan.AggPlan``
+and reused across rounds); for the sharded backends pass the mesh
 through ``run_multi_round(..., mesh=...)`` (default: a 1-D mesh over
 every visible device).  Scan-over-layers models (leaves with leading
 stacked-layer axes) ride the same fast paths: pass their per-leaf
@@ -45,10 +47,11 @@ class MultiRoundConfig:
     maecho: MAEchoConfig = MAEchoConfig(tau=20, eta=0.5)
     # "auto" promotes big leaves to the fused Pallas pipeline on TPU;
     # "sharded" additionally splits eligible leaves' out-rows over the
-    # mesh (run_multi_round's ``mesh`` argument).  The default stays
-    # "oracle" because interpret-mode kernel execution (this
+    # mesh and "sharded2d" the residual 2-D (out × in) over both mesh
+    # axis groups (run_multi_round's ``mesh`` argument).  The default
+    # stays "oracle" because interpret-mode kernel execution (this
     # container) is simulation, not a speedup.
-    maecho_backend: str = "oracle"  # oracle | kernel | auto | sharded
+    maecho_backend: str = "oracle"  # oracle|kernel|auto|sharded|sharded2d
     proj_alpha: float = 1.0
     seed: int = 0
 

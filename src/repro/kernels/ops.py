@@ -43,7 +43,9 @@ __all__ = [
     "maecho_streaming_apply", "maecho_streaming_gram_stacked",
     "maecho_streaming_apply_stacked", "maecho_sharded_gram",
     "maecho_sharded_apply", "maecho_sharded_gram_stacked",
-    "maecho_sharded_apply_stacked", "sharded_ok", "axis_size_of",
+    "maecho_sharded_apply_stacked", "maecho_sharded2d_gram",
+    "maecho_sharded2d_apply", "maecho_sharded2d_gram_stacked",
+    "maecho_sharded2d_apply_stacked", "sharded_ok", "axis_size_of",
     "fallback_warn", "flash_attention_auto", "interpret_default",
     "DEFAULT_BLOCK",
 ]
@@ -125,6 +127,21 @@ def _pad_factored(U, s, block):
     if kd > block:
         Up, _ = _pad_to(Up, block, 2)
         sp, _ = _pad_to(s, block, 1)
+    else:
+        sp = s
+    return Up, sp
+
+
+def _pad_factored_stacked(U, s, block):
+    """:func:`_pad_factored` for the stacked (N, L, in, k) layout —
+    the same rule shifted by the flattened layer axis, shared by every
+    stacked gram wrapper so the rank-padding exactness argument lives
+    in one place."""
+    Up, _ = _pad_to(U, block, 2)
+    kd = U.shape[3]
+    if kd > block:
+        Up, _ = _pad_to(Up, block, 3)
+        sp, _ = _pad_to(s, block, 2)
     else:
         sp = s
     return Up, sp
@@ -446,14 +463,7 @@ def _normalize_padded_stacked(W, V, P, block: int):
     Vp = (_pad_to(_pad_to(V, block, 2)[0], block, 3)[0]
           if (po or pi) else V)
     if kind == "factored":
-        Up, _ = _pad_to(P["U"], block, 2)
-        kd = P["U"].shape[3]
-        if kd > block:
-            Up, _ = _pad_to(Up, block, 3)
-            sp, _ = _pad_to(P["s"], block, 2)
-        else:
-            sp = P["s"]
-        Pk = (Up, sp)
+        Pk = _pad_factored_stacked(P["U"], P["s"], block)
     elif kind in ("scalar", "diag"):
         p = (jnp.broadcast_to(P[:, :, None], P.shape + (in_d,))
              if kind == "scalar" else P)
@@ -759,13 +769,7 @@ def maecho_sharded_gram_stacked(W, V, P, *, mesh, axis="data",
     rep3 = PartitionSpec(None, None, None)
     rep4 = PartitionSpec(None, None, None, None)
     if kind == "factored":
-        Up, _ = _pad_to(P["U"], block, 2)
-        kd = P["U"].shape[3]
-        if kd > block:
-            Up, _ = _pad_to(Up, block, 3)
-            sp, _ = _pad_to(P["s"], block, 2)
-        else:
-            sp = P["s"]
+        Up, sp = _pad_factored_stacked(P["U"], P["s"], block)
 
         def body_f(Wl, Vl, U, s):
             A = _mg.compressed_residual(Wl, Vl, U, s)
@@ -865,6 +869,207 @@ def maecho_sharded_apply_stacked(alpha, ctx, *, mesh, axis="data",
             body_g, mesh=mesh, in_specs=(rep2, row, crow, rep3),
             out_specs=(row, crow), check_rep=False)(alpha, Wp, Vp, Pk)
     return Wn[:, :out_d, :in_d], Vn[:, :, :out_d, :in_d]
+
+
+# --------------------------------------------------------------------------
+# 2-D (out × in) mesh-sharded pipeline: backend="sharded2d"
+# --------------------------------------------------------------------------
+def maecho_sharded2d_gram(W, V, P, *, mesh, axis_out="data",
+                          axis_in="model", block: int = DEFAULT_BLOCK,
+                          interpret=None):
+    """2-D-sharded gram half: out-rows over ``axis_out`` AND
+    in-columns over ``axis_in``.
+
+    Each device forms only its own (out/osz, in/isz) tile of the
+    projected residual — the dominant O(N·out·in²) projection FLOPs
+    split over the *whole* osz × isz fleet, which is the point: a leaf
+    whose out-dim tile count cannot divide the full device count 1-D
+    can still span it as the product of two smaller per-axis factors
+    (``rules.sharded_ok2d`` gates both dims).  The partial (N, N)
+    Grams are reconstructed by ONE ``psum`` over BOTH axis groups —
+    the leaf's only collective per outer iteration.
+
+    The residual tile is formed as a left-factor product (``Δ`` rows
+    against the projector's owned output columns), so dense and
+    factored kinds ride the existing ``maecho_gram_left`` kernel and
+    diagonal/scalar kinds the elementwise ``maecho_gram_diag`` on
+    pre-sliced operands.  Operands are zero-padded to
+    ``block × axis_size`` multiples on each sharded dim (zero padding
+    is exact for all three passes).
+
+    Returns ``(G, ctx)`` with ``ctx`` in the SAME format as
+    :func:`maecho_sharded_gram` — the apply half reuses the 1-D
+    row-local kernels verbatim (see :func:`maecho_sharded2d_apply`).
+    """
+    no, ni = _axis_names(axis_out), _axis_names(axis_in)
+    allnames = no + ni
+    osz = axis_size_of(mesh, axis_out)
+    isz = axis_size_of(mesh, axis_in)
+    out_d, in_d = W.shape
+    kind = _proj_kind(P)
+    itp = _resolve(interpret)
+    Wp = _pad_to(_pad_to(W, block * osz, 0)[0], block * isz, 1)[0]
+    Vp = _pad_to(_pad_to(V, block * osz, 1)[0], block * isz, 2)[0]
+    row = PartitionSpec(no, None)
+    crow = PartitionSpec(None, no, None)
+    col3 = PartitionSpec(None, None, ni)
+    rep2 = PartitionSpec(None, None)
+    rep3 = PartitionSpec(None, None, None)
+    if kind == "factored":
+        Up, sp = _pad_factored(P["U"], P["s"], block)
+        UTs = jnp.swapaxes(Up, 1, 2).astype(jnp.float32)
+
+        def body_f(Wl, Vl, U, s, UTl):
+            # A (full in-contraction, replicated over axis_in);
+            # the gram contracts A against only the owned UT columns
+            A = _mg.compressed_residual(Wl, Vl, U, s)
+            Gl = _mg.maecho_gram_left(A, UTl, interpret=itp)
+            return jax.lax.psum(Gl, allnames), A
+
+        G, A = shard_map(body_f, mesh=mesh,
+                         in_specs=(row, crow, rep3, rep2, col3),
+                         out_specs=(rep2, crow),
+                         check_rep=False)(Wp, Vp, Up, sp, UTs)
+        return G, (kind, Wp, Vp, (Up, sp, A), out_d, in_d)
+    if kind == "full":
+        in_p = Wp.shape[1]
+        Pk = _pad_to(_pad_to(P, in_p, 1)[0], in_p, 2)[0]
+
+        def body_d(Wl, Vl, Pl):
+            # residual tile = Δ @ P[:, owned columns]: the delta rows
+            # are the left factor, the projector's owned output
+            # columns the right — maecho_gram_left streams the tiles
+            A = (Wl[None] - Vl).astype(jnp.float32)
+            Gl = _mg.maecho_gram_left(A, Pl.astype(jnp.float32),
+                                      interpret=itp)
+            return jax.lax.psum(Gl, allnames)
+
+        G = shard_map(body_d, mesh=mesh, in_specs=(row, crow, col3),
+                      out_specs=rep2, check_rep=False)(Wp, Vp, Pk)
+    else:                                   # scalar / diag
+        p = _as_diag(P, in_d) if kind == "scalar" else P
+        Pk = _pad_to(p, block * isz, 1)[0]
+
+        def body_g(Wl, Vl, pl):
+            # elementwise kind: 2-D-slicing the operands is exact
+            return jax.lax.psum(
+                _mg.maecho_gram_diag(Wl, Vl, pl, interpret=itp),
+                allnames)
+
+        G = shard_map(body_g, mesh=mesh,
+                      in_specs=(PartitionSpec(no, ni),
+                                PartitionSpec(None, no, ni),
+                                PartitionSpec(None, ni)),
+                      out_specs=rep2, check_rep=False)(Wp, Vp, Pk)
+    return G, (kind, Wp, Vp, Pk, out_d, in_d)
+
+
+def maecho_sharded2d_apply(alpha, ctx, *, mesh, axis_out="data",
+                           axis_in="model", eta: float = 1.0,
+                           frac: float = 0.5, norm: bool = False,
+                           eps: float = 1e-12,
+                           block: int = DEFAULT_BLOCK, interpret=None):
+    """Update half of the 2-D pipeline: Eq. 7 then Eq. 11, row/col-local.
+
+    Delegates to the 1-D row-local apply over ``axis_out``: the
+    devices along ``axis_in`` hold replicated rows (the in-dim
+    contraction of Eq. 11 needs full Δ' rows, which stay resident from
+    the gram phase's in-replicated operands) and recompute identical
+    row shards — ZERO collectives either way, so the gram phase's
+    single two-axis psum remains the leaf's only one per outer
+    iteration.  ``ctx`` comes from :func:`maecho_sharded2d_gram`
+    (same layout as the 1-D context; the extra in-padding to
+    ``block × axis_in_size`` is still a block multiple, which is all
+    the kernels require)."""
+    del axis_in  # rows-only: the in-group replicates the apply
+    return maecho_sharded_apply(alpha, ctx, mesh=mesh, axis=axis_out,
+                                eta=eta, frac=frac, norm=norm, eps=eps,
+                                block=block, interpret=interpret)
+
+
+def maecho_sharded2d_gram_stacked(W, V, P, *, mesh, axis_out="data",
+                                  axis_in="model",
+                                  block: int = DEFAULT_BLOCK,
+                                  interpret=None):
+    """Stacked 2-D gram half: same contract as
+    :func:`maecho_sharded2d_gram` with the flattened scan-layer axis
+    riding the kernel grid inside every (out × in) shard — ONE stacked
+    launch per device and ONE two-axis ``psum`` per leaf per outer
+    iteration carrying the whole (L, N, N) Gram stack."""
+    no, ni = _axis_names(axis_out), _axis_names(axis_in)
+    allnames = no + ni
+    osz = axis_size_of(mesh, axis_out)
+    isz = axis_size_of(mesh, axis_in)
+    L, out_d, in_d = W.shape
+    kind = _proj_kind_stacked(P)
+    itp = _resolve(interpret)
+    Wp = _pad_to(_pad_to(W, block * osz, 1)[0], block * isz, 2)[0]
+    Vp = _pad_to(_pad_to(V, block * osz, 2)[0], block * isz, 3)[0]
+    row = PartitionSpec(None, no, None)
+    crow = PartitionSpec(None, None, no, None)
+    col4 = PartitionSpec(None, None, None, ni)
+    rep3 = PartitionSpec(None, None, None)
+    rep4 = PartitionSpec(None, None, None, None)
+    if kind == "factored":
+        Up, sp = _pad_factored_stacked(P["U"], P["s"], block)
+        UTs = jnp.swapaxes(Up, 2, 3).astype(jnp.float32)
+
+        def body_f(Wl, Vl, U, s, UTl):
+            A = _mg.compressed_residual(Wl, Vl, U, s)
+            Gl = _mg.maecho_gram_left_stacked(A, UTl, interpret=itp)
+            return jax.lax.psum(Gl, allnames), A
+
+        G, A = shard_map(body_f, mesh=mesh,
+                         in_specs=(row, crow, rep4, rep3, col4),
+                         out_specs=(rep3, crow),
+                         check_rep=False)(Wp, Vp, Up, sp, UTs)
+        return G, (kind, Wp, Vp, (Up, sp, A), out_d, in_d)
+    if kind == "full":
+        in_p = Wp.shape[2]
+        Pk = _pad_to(_pad_to(P, in_p, 2)[0], in_p, 3)[0]
+
+        def body_d(Wl, Vl, Pl):
+            # Δ (N, L, o_sh, in_p) is already the left-factor layout;
+            # Pl (N, L, in_p, in_sh) carries the owned output columns
+            A = (Wl[None] - Vl).astype(jnp.float32)
+            Gl = _mg.maecho_gram_left_stacked(
+                A, Pl.astype(jnp.float32), interpret=itp)
+            return jax.lax.psum(Gl, allnames)
+
+        G = shard_map(body_d, mesh=mesh, in_specs=(row, crow, col4),
+                      out_specs=rep3, check_rep=False)(Wp, Vp, Pk)
+    else:                                   # scalar / diag
+        p = (jnp.broadcast_to(P[:, :, None], P.shape + (in_d,))
+             if kind == "scalar" else P)
+        Pk = _pad_to(p, block * isz, 2)[0]
+
+        def body_g(Wl, Vl, pl_):
+            return jax.lax.psum(
+                _mg.maecho_gram_diag_stacked(Wl, Vl, pl_,
+                                             interpret=itp), allnames)
+
+        G = shard_map(body_g, mesh=mesh,
+                      in_specs=(PartitionSpec(None, no, ni),
+                                PartitionSpec(None, None, no, ni),
+                                PartitionSpec(None, None, ni)),
+                      out_specs=rep3, check_rep=False)(Wp, Vp, Pk)
+    return G, (kind, Wp, Vp, Pk, out_d, in_d)
+
+
+def maecho_sharded2d_apply_stacked(alpha, ctx, *, mesh,
+                                   axis_out="data", axis_in="model",
+                                   eta: float = 1.0, frac: float = 0.5,
+                                   norm: bool = False,
+                                   eps: float = 1e-12,
+                                   block: int = DEFAULT_BLOCK,
+                                   interpret=None):
+    """Stacked 2-D apply: row/col-local per-layer Eq. 7 + Eq. 11 via
+    the 1-D stacked apply over ``axis_out`` (the in-group replicates
+    the rows — zero collectives, cf. :func:`maecho_sharded2d_apply`)."""
+    del axis_in
+    return maecho_sharded_apply_stacked(
+        alpha, ctx, mesh=mesh, axis=axis_out, eta=eta, frac=frac,
+        norm=norm, eps=eps, block=block, interpret=interpret)
 
 
 def flash_attention_auto(q, k, v, *, causal: bool = True, bq: int = 256,

@@ -9,13 +9,16 @@ the 40 standard pairs; this is the "most representative of the paper's
 technique" hillclimb target in EXPERIMENTS.md §Perf.
 
   PYTHONPATH=src python -m repro.launch.dryrun_agg --arch llama3-8b \
-      [--clients 8] [--multipod] [--backend kernel|auto|sharded]
+      [--clients 8] [--multipod] \
+      [--backend kernel|auto|sharded|sharded2d]
 
-``--backend`` selects the aggregation compute path to compile; every
-run prints a ``[coverage]`` per-backend leaf summary (which leaves
-ride the kernel / sharded pipelines, which fall back to the oracle —
-scan-over-layers leaves now fold their layer axis into the kernel
-grid instead of forcing the oracle).
+``--backend`` selects the aggregation compute path to compile —
+unknown strings are rejected up front with the full choice list
+(``core.plan.validate_backend``), never silently routed to a default.
+Every run prints a ``[coverage]`` per-backend leaf summary: the
+compiled ``AggPlan``'s per-leaf routes (which leaves ride the
+kernel / sharded / sharded2d pipelines, which fall back to the
+oracle), which is definitionally what the executor runs.
 
 ``--sharded-smoke`` instead EXECUTES an 8-way out-dim-sharded
 aggregation (``core.maecho`` backend="sharded") on forced host devices
@@ -47,6 +50,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import get_config  # noqa: E402
 from repro.core.maecho import MAEchoConfig, _maecho_jit  # noqa: E402
+from repro.core.plan import compile_plan, validate_backend  # noqa: E402
 from repro.fl.llm_adapter import stack_levels_fn  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models.zoo import get_model  # noqa: E402
@@ -57,9 +61,9 @@ from repro.utils import trees  # noqa: E402
 
 def coverage_report(W0, Pp, levels_tree, macfg, backend: str,
                     mesh=None, convention: str = "io") -> dict:
-    """Print the per-backend leaf-coverage summary: which compute path
-    every leaf of the aggregation takes under the requested backend —
-    the CLI face of ``core.maecho.dispatch_summary``, so a leaf
+    """Print the per-backend leaf-coverage summary: the compiled
+    ``AggPlan``'s per-leaf routes (``core.maecho.dispatch_summary`` is
+    a view over the same plan the executor dispatches on), so a leaf
     silently degraded to the oracle is visible instead of buried in a
     trace-time warning."""
     from repro.core.maecho import dispatch_summary
@@ -109,8 +113,6 @@ def build_agg(arch: str, n_clients: int, mesh, tau: int,
     W0 = trees.tree_map(lambda l: sds(l.shape, jnp.float32), pspecs)
     V0 = trees.map_with_path(v_spec, pspecs)
     Pp = trees.map_with_path(p_spec, pspecs)
-    levels = tuple(lv for _, lv in
-                   [(p, levels_fn(p)) for p, _ in trees.tree_paths(W0)])
 
     def w_sh(path, leaf):
         return NamedSharding(mesh, rules.param_spec(path, leaf.shape))
@@ -139,10 +141,11 @@ def build_agg(arch: str, n_clients: int, mesh, tau: int,
 
     macfg = MAEchoConfig(tau=tau, eta=0.5, qp_iters=50)
     levels_tree = trees.map_with_path(lambda p, _: levels_fn(p), W0)
+    plan = compile_plan(W0, Pp, levels_tree, macfg, "io", backend,
+                        agg_mesh)
 
     def step(W, V, Pr):
-        return _maecho_jit(W, V, Pr, macfg, "io", levels, backend,
-                           agg_mesh)
+        return _maecho_jit(W, V, Pr, macfg, "io", plan, agg_mesh)
 
     return step, (W0, V0, Pp), shardings, cfg, (macfg, levels_tree)
 
@@ -150,9 +153,13 @@ def build_agg(arch: str, n_clients: int, mesh, tau: int,
 def run(arch: str, n_clients: int, multi_pod: bool,
         out_dir: str = "experiments/dryrun", rank: int = 0,
         backend: str = "oracle") -> dict:
+    # reject typo'd backends up front (with the full choice list)
+    # instead of letting them fall through to a default route — the
+    # CLI's argparse `choices` guards the flag, this guards callers
+    validate_backend(backend)
     mesh_name = "2x16x16" if multi_pod else "16x16"
     mesh = make_production_mesh(multi_pod=multi_pod)
-    agg_mesh = mesh if backend == "sharded" else None
+    agg_mesh = mesh if backend in ("sharded", "sharded2d") else None
     tag = f"aggregate_N{n_clients}" + (f"_rank{rank}" if rank else "")
     rec = {"arch": arch, "shape": tag,
            "mesh": mesh_name, "status": "ok", "kind": "aggregate",
@@ -298,7 +305,109 @@ def run_sharded_smoke(n_devices: int = 8, out_d: int = 1024,
           f"+{n_stack}-layer stacked leaf), "
           f"max|sharded - oracle| = {err:.2e} "
           f"({rec['elapsed_s']}s)")
+    err2d, counts2d, cov_ok = run_sharded2d_smoke(
+        n_devices, tau=tau, n_clients=n_clients)
+    rec["max_abs_err_2d"] = err2d
+    rec["coverage_2d"] = counts2d
+    if err2d >= 1e-3:
+        rec["status"] = "PARITY_FAIL_2D"
+    elif not cov_ok:
+        # parity held but the expected routes didn't run — a routing
+        # regression, reported as such (not as a phantom numeric one)
+        rec["status"] = "COVERAGE_FAIL_2D"
     return rec
+
+
+def run_sharded2d_smoke(n_devices: int = 8, tau: int = 2,
+                        n_clients: int = 4):
+    """The 2-D (out × in) half of the smoke: execute
+    ``backend="sharded2d"`` on a factored (n_data × n_model) mesh of
+    the same forced host devices and check <1e-3 parity against the
+    single-device oracle.
+
+    The tree carries the acceptance case: a "thin" leaf whose out-dim
+    (2 tiles) CANNOT span the ``n_devices``-way fleet under the 1-D
+    out-dim shard (``ops.sharded_ok`` rejects it) but aggregates
+    sharded under the 2-D plan because the fleet factors as
+    out_axes × in_axes — plus a wide leaf, a stacked leaf riding the
+    2-D shard, an in-ragged leaf exercising the sharded2d → sharded
+    fallback chain, and a bias on the oracle rule.  Returns
+    ``(max_abs_err, coverage_counts, coverage_ok)`` — parity and
+    route coverage are reported separately so a red smoke names the
+    regression that actually happened.
+    """
+    from repro.core.maecho import MAEchoConfig, maecho_aggregate
+    from repro.kernels import ops
+    from repro.launch.mesh import make_debug_mesh
+    from repro.sharding.rules import sharded_ok2d
+    from repro.utils import trees as _trees
+
+    n_model = (4 if (n_devices % 4 == 0 and n_devices >= 8)
+               else 2 if n_devices >= 2 else 1)
+    n_data = max(1, n_devices // n_model)
+    mesh2d = make_debug_mesh(n_data, n_model)
+    in2 = 128 * n_model          # in-tiles span the model axis exactly
+    thin_out = 256               # 2 tiles: 1-D over a big fleet fails
+    # the fleet-spanning demo needs the thin leaf 1-D-ineligible over
+    # the WHOLE fleet yet 2-D-eligible over the factored grid — true
+    # at the CI device counts (4 and 8); other counts (e.g. 2, where
+    # 2 tiles 1-D-shard fine, or 6, where n_data=3 doesn't divide
+    # them) still run the parity but without the premise claim
+    fleet_demo = (not ops.sharded_ok(thin_out, in2, n_devices)
+                  and sharded_ok2d(thin_out, in2, n_data, n_model))
+    if n_devices in (4, 8):
+        assert fleet_demo, (
+            "smoke premise broken: the thin leaf must be "
+            "1-D-ineligible over the fleet and pass the 2-D gate")
+    L = 2
+    clients, projs = [], []
+    for i in range(n_clients):
+        k = jax.random.PRNGKey(101 * i + 5)
+        kw, kt, ks, kr, kb = (jax.random.fold_in(k, t)
+                              for t in range(5))
+        Uw = jnp.linalg.qr(jax.random.normal(kw, (in2, 24)))[0]
+        sw = jax.random.uniform(jax.random.fold_in(kw, 1), (24,))
+        Ut = jnp.linalg.qr(jax.random.normal(kt, (in2, 16)))[0]
+        st = jax.random.uniform(jax.random.fold_in(kt, 1), (16,))
+        Us = jnp.linalg.qr(jax.random.normal(ks, (L, in2, 16)))[0]
+        ss = jax.random.uniform(jax.random.fold_in(ks, 1), (L, 16))
+        clients.append({
+            "wide": jax.random.normal(kw, (1024, in2)) * 0.3,
+            "thin": jax.random.normal(kt, (thin_out, in2)) * 0.3,
+            "stack": jax.random.normal(jax.random.fold_in(ks, 2),
+                                       (L, 512, in2)) * 0.3,
+            "ragged_in": jax.random.normal(kr, (1024, 320)) * 0.3,
+            "b": jax.random.normal(kb, (thin_out,)) * 0.1,
+        })
+        projs.append({
+            "wide": (Uw * sw) @ Uw.T,
+            "thin": {"U": Ut, "s": st},
+            "stack": jnp.einsum("lik,lk,ljk->lij", Us, ss, Us),
+            "ragged_in": jax.random.uniform(
+                jax.random.fold_in(kr, 1), (320,)),
+            "b": jnp.ones(()),
+        })
+    levels = {key: (1 if key == "stack" else 0) for key in clients[0]}
+    cfg = MAEchoConfig(tau=tau, eta=0.5, qp_iters=60)
+    counts = coverage_report(
+        clients[0],
+        _trees.tree_map(lambda *xs: jnp.stack(xs, 0), *projs),
+        levels, cfg, "sharded2d", mesh2d, convention="oi")
+    t0 = time.time()
+    a = maecho_aggregate(clients, projs, cfg, backend="oracle",
+                         stack_levels=levels)
+    b = maecho_aggregate(clients, projs, cfg, backend="sharded2d",
+                         mesh=mesh2d, stack_levels=levels)
+    err = max(float(jnp.max(jnp.abs(a[key] - b[key]))) for key in a)
+    cov_ok = (counts.get("sharded2d", 0) >= 3 or not fleet_demo)
+    ok = err < 1e-3 and cov_ok
+    note = (f"thin out={thin_out} (1-D-ineligible over {n_devices})"
+            if fleet_demo else f"thin out={thin_out}")
+    print(f"[{'ok' if ok else 'FAIL'}] sharded2d smoke: "
+          f"{n_data}x{n_model} mesh, {note}, "
+          f"max|sharded2d - oracle| = {err:.2e} "
+          f"({round(time.time() - t0, 1)}s)")
+    return err, counts, cov_ok
 
 
 def main() -> None:
@@ -309,9 +418,11 @@ def main() -> None:
     ap.add_argument("--rank", type=int, default=0,
                     help="factored-P rank (0 = full projectors)")
     ap.add_argument("--backend", default="oracle",
-                    choices=["oracle", "kernel", "auto", "sharded"],
+                    choices=["oracle", "kernel", "auto", "sharded",
+                             "sharded2d"],
                     help="aggregation compute path to compile + "
-                         "report leaf coverage for")
+                         "report leaf coverage for (unknown values "
+                         "are rejected, never silently defaulted)")
     ap.add_argument("--sharded-smoke", action="store_true",
                     help="execute an 8-way sharded aggregation and "
                          "assert parity with the oracle (set "

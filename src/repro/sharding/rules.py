@@ -37,6 +37,37 @@ def data_axes(mesh: Mesh):
     return ("pod", "data") if "pod" in mesh.shape else ("data",)
 
 
+def sharded_ok2d(out_d: int, in_d: int, out_asz: int, in_asz: int,
+                 block: int = 128, warn: bool = False) -> bool:
+    """Eligibility of a leaf for the 2-D (out × in) sharded pipeline.
+
+    Both dims must reach one tile, and *each* dim's tile count must
+    divide evenly over its axis group — the same block-granular `_ok`
+    divisibility contract as ``kernels.ops.sharded_ok``, applied per
+    axis (out-rows over ``cfg.mesh_axis``, in-columns over
+    ``cfg.mesh_in_axis``; every device gets whole tiles on both dims).
+    This is what lets a leaf whose out-dim alone cannot span the fleet
+    (out tiles < device count) still aggregate sharded: the fleet
+    factors as out_asz × in_asz and only the per-axis counts must
+    divide.  With ``warn=True`` an ineligible leaf surfaces the
+    fallback once via ``kernels.ops.fallback_warn`` (the plan compiler
+    sets it) instead of degrading silently.
+    """
+    if out_d < block or in_d < block:
+        ok = False
+    else:
+        ok = ((-(-out_d // block)) % out_asz == 0
+              and (-(-in_d // block)) % in_asz == 0)
+    if not ok and warn:
+        from repro.kernels.ops import fallback_warn
+
+        fallback_warn(
+            f"sharded2d-ineligible leaf (out={out_d}, in={in_d}, "
+            f"axes={out_asz}x{in_asz}, block={block}): falling back "
+            f"to the 1-D out-dim shard / single-device dispatch")
+    return ok
+
+
 class Rules:
     """Builds PartitionSpecs with divisibility checks."""
 
@@ -192,6 +223,42 @@ class Rules:
     def agg_proj_spec(self, shape: tuple) -> P:
         """Projectors act on the (unsharded) in-axis — replicated."""
         return P(*([None] * len(shape)))
+
+    # ------ 2-D (out × in) aggregation: backend="sharded2d" ------
+    # Rows stay on the data axes; the residual's in-columns (and dense
+    # projectors' *output* column axis) additionally shard over
+    # "model".  Divisibility gating is `sharded_ok2d` above; the
+    # shapes must stay congruent with the shard_map specs
+    # ops.maecho_sharded2d_gram builds inline (pinned by
+    # tests/test_plan.py).
+    def agg_in_axes(self, in_dim: int):
+        """Axes for a leaf's in-columns — "model" when the dim
+        divides, else None (degrades to the 1-D out-row shard)."""
+        return self._ok(in_dim, "model")
+
+    def agg_weight_spec2d(self, shape: tuple) -> P:
+        """Global weight leaf W (out, in): rows over the data axes AND
+        columns over "model" (each with the `_ok` fallback)."""
+        if len(shape) != 2:
+            return P(*([None] * len(shape)))
+        return self.spec(shape, (data_axes(self.mesh), "model"))
+
+    def agg_anchor_spec2d(self, shape: tuple) -> P:
+        """Client-stacked anchors V (N, out, in): same 2-D placement
+        on the trailing dims, clients replicated."""
+        if len(shape) != 3:
+            return P(*([None] * len(shape)))
+        return self.spec(shape,
+                         (None, data_axes(self.mesh), "model"))
+
+    def agg_proj_spec2d(self, shape: tuple) -> P:
+        """Dense projectors P (N, in, in): the *output* column axis
+        (the last one — the residual's in-index) shards over "model";
+        the contraction axis stays replicated (each device contracts
+        the full in-dim when forming its residual tile)."""
+        if len(shape) != 3:
+            return P(*([None] * len(shape)))
+        return self.spec(shape, (None, None, "model"))
 
     def agg_gram_spec(self) -> P:
         """(N, N) Grams are psum-reconstructed — replicated."""

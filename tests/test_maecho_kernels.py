@@ -28,6 +28,13 @@ def _one_device_mesh():
     return Mesh(np.asarray(jax.devices()[:1]), ("data",))
 
 
+def _one_device_mesh2d():
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+
+
 CFG = MAEchoConfig(tau=2, eta=0.5, qp_iters=60)
 
 
@@ -132,7 +139,8 @@ def test_aggregate_parity_all_backends(seed, n, kind, convention, lead,
         seed, n, kind, convention, lead, shape, use_mask)
     want = _agg(clients, projs, levels, convention, "oracle", mask=mask)
     for backend, mesh in (("kernel", None), ("auto", None),
-                          ("sharded", _one_device_mesh())):
+                          ("sharded", _one_device_mesh()),
+                          ("sharded2d", _one_device_mesh2d())):
         got = _agg(clients, projs, levels, convention, backend,
                    mesh=mesh, mask=mask)
         _assert_close(want, got)
@@ -151,7 +159,8 @@ def test_aggregate_parity_each_kind_pinned(kind, convention):
         7, 3, kind, convention, (2,), (128, 128), False)
     want = _agg(clients, projs, levels, convention, "oracle")
     for backend, mesh in (("kernel", None),
-                          ("sharded", _one_device_mesh())):
+                          ("sharded", _one_device_mesh()),
+                          ("sharded2d", _one_device_mesh2d())):
         _assert_close(want, _agg(clients, projs, levels,
                                  backend=backend,
                                  convention=convention, mesh=mesh))

@@ -7,6 +7,7 @@ need ``XLA_FLAGS=--xla_force_host_platform_device_count`` set before
 jax initializes, which a pytest session can't do retroactively — those
 parity/fallback checks subprocess (marked ``slow``).
 """
+import dataclasses
 import os
 import pathlib
 import subprocess
@@ -19,7 +20,8 @@ import numpy as np
 import pytest
 from jax.sharding import Mesh
 
-from repro.core.maecho import MAEchoConfig, _use_sharded, maecho_aggregate
+from repro.core.maecho import MAEchoConfig, maecho_aggregate
+from repro.core.plan import leaf_route
 from repro.kernels import ops, ref
 from repro.launch.mesh import make_debug_mesh
 
@@ -76,26 +78,31 @@ def test_axis_size_of():
     assert ops.axis_size_of(mesh, "absent") == 1
 
 
-def test_use_sharded_fallback_paths():
+def test_sharded_route_fallback_paths():
+    """The routing rules `_use_sharded` used to encode, now pinned on
+    the plan compiler's single copy (``plan.leaf_route``)."""
     mesh = FakeMesh({"data": 8, "model": 1})
+    cfg = MAEchoConfig()
     W = jnp.zeros((1024, 256))
     P = jnp.zeros((3, 256, 256))
-    assert _use_sharded(W, P, "sharded", mesh, "oi", "data")
+    def route(w, p, backend, m, conv="oi", c=cfg):
+        return leaf_route(w, p, 0, c, conv, backend, m)
+    assert route(W, P, "sharded", mesh) == "sharded"
     # io convention: the kernel-layout out-dim is W.shape[1]
-    assert _use_sharded(W.T, P, "sharded", mesh, "io", "data")
-    assert not _use_sharded(W.T, P, "sharded", mesh, "oi", "data")
+    assert route(W.T, P, "sharded", mesh, "io") == "sharded"
+    assert route(W.T, P, "sharded", mesh, "oi") != "sharded"
     # non-divisible out, wrong backend, missing mesh, 1-D leaf
-    assert not _use_sharded(jnp.zeros((300, 256)), P, "sharded", mesh,
-                            "oi", "data")
-    assert not _use_sharded(W, P, "kernel", mesh, "oi", "data")
-    assert not _use_sharded(W, P, "sharded", None, "oi", "data")
-    assert not _use_sharded(jnp.zeros((1024,)), jnp.zeros((3,)),
-                            "sharded", mesh, "oi", "data")
+    assert route(jnp.zeros((300, 256)), P, "sharded",
+                 mesh) == "kernel"
+    assert route(W, P, "kernel", mesh) == "kernel"
+    assert route(W, P, "sharded", None) == "kernel"
+    assert route(jnp.zeros((1024,)), jnp.zeros((3,)), "sharded",
+                 mesh) == "oracle"
     # a mesh without the configured axis: fall back, don't KeyError
-    assert not _use_sharded(W, P, "sharded", FakeMesh({"x": 8}),
-                            "oi", "data")
-    assert not _use_sharded(W, P, "sharded", mesh, "oi",
-                            ("pod", "data"))
+    assert route(W, P, "sharded", FakeMesh({"x": 8})) == "kernel"
+    assert route(W, P, "sharded", mesh,
+                 c=dataclasses.replace(
+                     cfg, mesh_axis=("pod", "data"))) == "kernel"
 
 
 def test_sharded_backend_mesh_without_axis_falls_back():
@@ -214,8 +221,9 @@ def test_divisibility_fallback_eligibility():
     projs = [{"W": jax.random.uniform(jax.random.PRNGKey(9 + i),
                                       (140,))}
              for i in range(N)]
-    assert not _use_sharded(clients[0]["W"], jnp.zeros((N, 140)),
-                            "sharded", mesh, "oi", "data")
+    assert leaf_route(clients[0]["W"], jnp.zeros((N, 140)), 0,
+                      MAEchoConfig(), "oi", "sharded",
+                      mesh) != "sharded"
     cfg = MAEchoConfig(tau=2, eta=0.5, qp_iters=40)
     a = maecho_aggregate(clients, projs, cfg, backend="oracle")
     b = maecho_aggregate(clients, projs, cfg, backend="sharded",

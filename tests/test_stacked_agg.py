@@ -10,9 +10,9 @@ import numpy as np
 import pytest
 from jax.sharding import Mesh
 
-from repro.core.maecho import (MAEchoConfig, _kernel_eligible,
-                               _use_sharded, dispatch_summary,
+from repro.core.maecho import (MAEchoConfig, dispatch_summary,
                                maecho_aggregate)
+from repro.core.plan import kernel_eligible, leaf_route
 from repro.kernels import ops
 
 
@@ -41,29 +41,30 @@ def _stacked_model(L, n=3, out_d=256, in_d=140, kind="full", rank=16):
 def test_stacked_kernel_eligibility():
     W3 = jnp.zeros((4, 1024, 256))
     Pfull = jnp.zeros((3, 4, 256, 256))
-    assert _kernel_eligible(W3, Pfull, levels=1)
-    assert not _kernel_eligible(W3, Pfull)          # ndim mismatch
-    assert _kernel_eligible(jnp.zeros((2, 4, 64, 32)),
-                            jnp.zeros((3, 2, 4)), levels=2)  # scalar
+    assert kernel_eligible(W3, Pfull, levels=1)
+    assert not kernel_eligible(W3, Pfull)           # ndim mismatch
+    assert kernel_eligible(jnp.zeros((2, 4, 64, 32)),
+                           jnp.zeros((3, 2, 4)), levels=2)  # scalar
     U = {"U": jnp.zeros((3, 4, 256, 16)), "s": jnp.zeros((3, 4, 16))}
-    assert _kernel_eligible(W3, U, levels=1)
-    assert not _kernel_eligible(W3, U, levels=2)
+    assert kernel_eligible(W3, U, levels=1)
+    assert not kernel_eligible(W3, U, levels=2)
 
 
 def test_stacked_sharded_eligibility():
     class FakeMesh:
         shape = {"data": 8, "model": 1}
 
+    cfg = MAEchoConfig()
     W = jnp.zeros((4, 1024, 256))
     P = jnp.zeros((3, 4, 256, 256))
-    assert _use_sharded(W, P, "sharded", FakeMesh(), "oi", "data",
-                        levels=1)
+    assert leaf_route(W, P, 1, cfg, "oi", "sharded",
+                      FakeMesh()) == "sharded"
     # io: kernel-layout out-dim is the trailing axis
-    assert _use_sharded(jnp.zeros((4, 256, 1024)), P, "sharded",
-                        FakeMesh(), "io", "data", levels=1)
+    assert leaf_route(jnp.zeros((4, 256, 1024)), P, 1, cfg, "io",
+                      "sharded", FakeMesh()) == "sharded"
     # non-divisible out-dim tiles fall back, stacked or not
-    assert not _use_sharded(jnp.zeros((4, 300, 256)), P, "sharded",
-                            FakeMesh(), "oi", "data", levels=1)
+    assert leaf_route(jnp.zeros((4, 300, 256)), P, 1, cfg, "oi",
+                      "sharded", FakeMesh()) == "stacked"
 
 
 # --------------------------------------------------------------------------
@@ -167,12 +168,13 @@ def test_dispatch_summary_routes():
     per_leaf, counts = dispatch_summary(W0, P, levels, cfg, "oi",
                                         "kernel", None)
     routes = dict((p, r) for p, _, r in per_leaf)
-    # "small" is forced onto the kernel route by backend="kernel" but
-    # runs the jnp oracle inside the wrappers (below one tile) — the
-    # summary must report the path that actually executes
-    assert routes == {"stack": "kernel", "small": "oracle",
+    # "small" is requested onto the kernel route by backend="kernel"
+    # but is below one tile — the plan routes (and the summary
+    # reports) the jnp oracle that actually executes; the eligible
+    # stacked leaf takes the "stacked" kernel-grid route
+    assert routes == {"stack": "stacked", "small": "oracle",
                       "b": "oracle"}
-    assert counts == {"kernel": 1, "oracle": 2}
+    assert counts == {"stacked": 1, "oracle": 2}
     # sharded promotes the eligible stacked leaf
 
     class FakeMesh:

@@ -1,0 +1,116 @@
+"""Serving benchmarks: dense full-window decode attention (oracle) vs
+the Pallas ring-buffer kernel with the bucketed live-window crop — the
+decode fast path the serve loop rides — plus an end-to-end serve-step
+pair on the qwen2-0.5b smoke model.
+
+Micro rows fix the live fill at 256 slots and sweep the ring-buffer
+window W: the oracle pays O(W) per token while the cropped kernel pays
+O(live bucket), which is the serving regime (large context budget,
+mostly-empty cache).  Parity between the two paths is asserted on
+every row; ``derived`` records the effective Pallas interpret flag and
+the crop actually applied, so a trajectory point is interpretable
+without knowing the machine it ran on.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.kernels import ops
+from repro.kernels.env import interpret_default
+from repro.models import layers as L
+
+
+def _decode_attn_rows(quick: bool, interp: bool) -> None:
+    B, Hq, Hkv, D = 8, 16, 4, 64
+    fill = 256
+    windows = (256, 1024) if quick else (256, 1024, 4096)
+    k0 = jax.random.PRNGKey(0)
+    for W in windows:
+        ks = jax.random.split(jax.random.fold_in(k0, W), 3)
+        q = jax.random.normal(ks[0], (B, 1, Hq, D), jnp.float32)
+        kc = jax.random.normal(ks[1], (B, W, Hkv, D), jnp.float32)
+        vc = jax.random.normal(ks[2], (B, W, Hkv, D), jnp.float32)
+        live = min(fill, W)
+        valid = jnp.broadcast_to(jnp.arange(W)[None, :] < live, (B, W))
+
+        oracle = jax.jit(L.decode_attention_oracle)
+        kern = jax.jit(functools.partial(ops.decode_attention_auto,
+                                         w_live=live))
+        ref_out = oracle(q, kc, vc, valid)
+        got = kern(q, kc, vc, valid)
+        ok = np.allclose(np.asarray(got), np.asarray(ref_out),
+                         atol=1e-4)
+        assert ok, f"decode parity failed at W={W}"
+
+        _, us_o = timed(oracle, q, kc, vc, valid)
+        _, us_k = timed(kern, q, kc, vc, valid)
+        wl = ops.live_window(live, W)
+        row(f"serve/decode_attn_oracle_W{W}", us_o,
+            f"interpret={interp} fill={live}")
+        row(f"serve/decode_attn_kernel_W{W}", us_k,
+            f"parity={ok} interpret={interp} w_live={wl} "
+            f"speedup={us_o / max(us_k, 1e-9):.1f}x")
+
+
+def _serve_step_rows(quick: bool, interp: bool) -> None:
+    """Per-token decode latency of the full qwen2-0.5b smoke serve
+    step at a mostly-empty context budget, oracle vs auto backend."""
+    from repro.configs import get_smoke_config
+    from repro.launch.serve import live_bucket, pad_kv_to_window
+    from repro.models.zoo import get_model
+
+    Bm, P = 4, 200
+    window = 512 if quick else 4096
+    steps = 8 if quick else 24
+    cfg0 = get_smoke_config("qwen2-0.5b")
+    rng = np.random.RandomState(0)
+    prompts = jnp.asarray(rng.randint(0, cfg0.vocab, size=(Bm, P)),
+                          jnp.int32)
+
+    toks_by_backend = {}
+    for backend in ("oracle", "auto"):
+        cfg = cfg0.replace(attn_backend=backend)
+        model = get_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        logits, cache = jax.jit(model.prefill)(
+            params, {"tokens": prompts})
+        cache = pad_kv_to_window(cache, window)
+        serve_step = jax.jit(model.make_serve_step(),
+                             static_argnames=("w_live",))
+        token = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        wl = live_bucket(P + steps + 1, window)
+        # warm the single (shape, w_live) variant the loop uses
+        tok, c = serve_step(params, cache, token, jnp.int32(P),
+                            w_live=wl)
+        jax.block_until_ready(tok)
+        toks = [int(token[0, 0]), int(tok[0, 0])]
+        t0 = time.time()
+        for t in range(steps):
+            tok, c = serve_step(params, c, tok, jnp.int32(P + 1 + t),
+                                w_live=wl)
+            toks.append(int(tok[0, 0]))
+        jax.block_until_ready(tok)
+        us = (time.time() - t0) / steps * 1e6
+        toks_by_backend[backend] = toks
+        tok_s = Bm / (us / 1e6)
+        row(f"serve/serve_step_{backend}", us,
+            f"tok_s={tok_s:.0f} window={window} w_live={wl} "
+            f"interpret={interp}")
+    assert toks_by_backend["oracle"] == toks_by_backend["auto"], \
+        "serve-step backends diverged token-wise"
+
+
+def run(quick: bool = False):
+    interp = interpret_default()
+    _decode_attn_rows(quick, interp)
+    _serve_step_rows(quick, interp)
+
+
+if __name__ == "__main__":
+    run()

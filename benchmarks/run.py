@@ -14,9 +14,9 @@ import sys
 import time
 
 from benchmarks import (bench_kernels, bench_maecho_agg, bench_qp_batch,
-                        bench_sharded2d_agg, bench_sharded_agg,
-                        bench_stacked_agg, fig4_cvae, fig8_mu,
-                        fig9_multiround, roofline_report,
+                        bench_serve, bench_sharded2d_agg,
+                        bench_sharded_agg, bench_stacked_agg, fig4_cvae,
+                        fig8_mu, fig9_multiround, roofline_report,
                         table1_multimodel, table4_beta_sweep,
                         table5_local_steps, table6_svd)
 from benchmarks.common import drain_rows, persist_rows
@@ -32,6 +32,7 @@ SUITES = {
     "kernels": bench_kernels.run,
     "maecho_agg": bench_maecho_agg.run,
     "qp_batch": bench_qp_batch.run,
+    "serve": bench_serve.run,
     "sharded_agg": bench_sharded_agg.run,
     "sharded2d_agg": bench_sharded2d_agg.run,
     "stacked_agg": bench_stacked_agg.run,
@@ -48,6 +49,7 @@ PERF_SUITES = [
     "kernels",
     "maecho_agg",
     "qp_batch",
+    "serve",
     "sharded_agg",
     "sharded2d_agg",
     "stacked_agg",

@@ -1,0 +1,20 @@
+"""Process-wide Pallas interpret-mode switch.
+
+``REPRO_PALLAS_INTERPRET`` (default "1": kernel bodies execute on CPU —
+this container has no TPU) is read at trace time; a TPU launch flips the
+one env var instead of editing call sites.  This lives in its own tiny
+module so the raw kernel modules (``flash_attention``,
+``decode_attention``) can resolve their ``interpret=None`` defaults
+without importing ``ops`` — which imports them.
+"""
+from __future__ import annotations
+
+import os
+
+INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
+
+
+def interpret_default() -> bool:
+    """True unless REPRO_PALLAS_INTERPRET is 0/false/no/off."""
+    val = os.environ.get(INTERPRET_ENV, "1").strip().lower()
+    return val not in ("0", "false", "no", "off")

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.env import interpret_default
+
 NEG_INF = -1e30
 
 
@@ -72,12 +74,17 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
                                              "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, bq: int = 256,
-                    bk: int = 256, interpret: bool = True):
+                    bk: int = 256, interpret: bool | None = None):
     """q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D); returns (B, Sq, Hq, D).
 
     GQA is handled by an index_map trick: kv head = q head // group.
     Sequences must be multiples of the block sizes (caller pads).
+    ``interpret=None`` resolves through ``REPRO_PALLAS_INTERPRET`` like
+    every other kernel (a bare default of True would silently pin the
+    raw entry point to the interpreter even on a TPU launch).
     """
+    if interpret is None:
+        interpret = interpret_default()
     B, Sq, Hq, D = q.shape
     _, Sk, Hkv, _ = k.shape
     group = Hq // Hkv

@@ -18,7 +18,6 @@ tile.  All of them assume the "oi" layout — ``core.maecho`` transposes
 """
 from __future__ import annotations
 
-import os
 import warnings
 
 import jax
@@ -26,7 +25,9 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec
 
+from repro.kernels import env as _env
 from repro.kernels import ref
+from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
 from repro.kernels import maecho_gram as _mg
 from repro.kernels import maecho_update as _mu
@@ -47,20 +48,17 @@ __all__ = [
     "maecho_sharded2d_apply", "maecho_sharded2d_gram_stacked",
     "maecho_sharded2d_apply_stacked", "sharded_ok", "axis_size_of",
     "fallback_warn", "flash_attention_auto", "interpret_default",
-    "DEFAULT_BLOCK",
+    "decode_attention", "decode_attention_auto", "decode_window_block",
+    "live_window", "DEFAULT_BLOCK",
 ]
-
-_INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
 
 # one tile edge: the auto wrappers fall back to the jnp oracles below
 # this, and core.maecho's backend="auto" keys off the same constant
 DEFAULT_BLOCK = 128
 
-
-def interpret_default() -> bool:
-    """True unless REPRO_PALLAS_INTERPRET is 0/false/no/off."""
-    val = os.environ.get(_INTERPRET_ENV, "1").strip().lower()
-    return val not in ("0", "false", "no", "off")
+# re-exported from env.py (the raw kernel modules resolve their
+# interpret=None defaults there; ops keeps the public name)
+interpret_default = _env.interpret_default
 
 
 _warned_fallbacks: set[str] = set()
@@ -217,6 +215,13 @@ def flash_attention(q, k, v, *, causal: bool = True, bq: int = 256,
                     bk: int = 256, interpret=None):
     return _fa.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
                                interpret=_resolve(interpret))
+
+
+def decode_attention(q, k_cache, v_cache, valid_mask, *, bw: int = 512,
+                     interpret=None, fold_batch=None):
+    return _da.decode_attention(q, k_cache, v_cache, valid_mask, bw=bw,
+                                interpret=_resolve(interpret),
+                                fold_batch=fold_batch)
 
 
 def rank_downdate(Q, U, A, *, bo: int = 256, bj: int = 256,
@@ -1074,8 +1079,90 @@ def maecho_sharded2d_apply_stacked(alpha, ctx, *, mesh,
 
 def flash_attention_auto(q, k, v, *, causal: bool = True, bq: int = 256,
                          bk: int = 256, interpret=None):
-    if q.shape[1] % min(bq, q.shape[1]) or k.shape[1] % min(bk, k.shape[1]):
-        return ref.flash_attention_ref(q, k, v, causal=causal)
-    return flash_attention(q, k, v, causal=causal,
-                           bq=min(bq, q.shape[1]), bk=min(bk, k.shape[1]),
-                           interpret=interpret)
+    """Pad-to-block front end for the flash kernel.
+
+    Causal self-attention (Sq == Sk): both sequences zero-pad to a
+    shared block multiple — padded keys sit strictly after every real
+    query, so the causal mask removes them and cropping the padded
+    query rows is exact.  Non-causal: the kernel runs only when Sk is
+    already a block multiple (zero-padded keys would enter an unmasked
+    softmax); query rows still pad/crop freely.  Remaining shapes
+    (causal with Sq != Sk — prefill-with-cache offsets) run the jnp
+    oracle.
+    """
+    Sq, Sk = q.shape[1], k.shape[1]
+    if causal and Sq == Sk:
+        b = min(bq, bk)
+        qp, _ = _pad_to(q, b, 1)
+        kp, _ = _pad_to(k, b, 1)
+        vp, _ = _pad_to(v, b, 1)
+        out = flash_attention(qp, kp, vp, causal=True,
+                              bq=min(bq, qp.shape[1]),
+                              bk=min(bk, kp.shape[1]),
+                              interpret=interpret)
+        return out[:, :Sq]
+    if not causal and Sk % min(bk, Sk) == 0:
+        qp, _ = _pad_to(q, min(bq, Sq), 1)
+        out = flash_attention(qp, k, v, causal=False,
+                              bq=min(bq, qp.shape[1]),
+                              bk=min(bk, Sk), interpret=interpret)
+        return out[:, :Sq]
+    return ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+def decode_window_block(W: int) -> int | None:
+    """Largest supported window block dividing W (None: ineligible).
+
+    Bigger blocks amortise per-block launch overhead; the skip
+    granularity stays coarse enough that a partially-filled window
+    still drops most dead blocks.
+    """
+    for bw in (512, 256, DEFAULT_BLOCK):
+        if W % bw == 0:
+            return bw
+    return None
+
+
+def live_window(w_live: int, W: int) -> int:
+    """Round a live-slot upper bound up to a block multiple, capped at W.
+
+    The serving fast path's static crop: a ring buffer whose highest
+    written slot (host-known — the serve loop tracks positions in
+    Python) is below ``w_live`` only ever has valid slots in
+    ``[0, w_live)``, so the attention read can slice the cache there.
+    Rounding to ``DEFAULT_BLOCK`` keeps the crop kernel-eligible and
+    bounds recompiles to the caller's bucketing policy.
+    """
+    return min(W, -(-int(w_live) // DEFAULT_BLOCK) * DEFAULT_BLOCK)
+
+
+def decode_attention_auto(q, k_cache, v_cache, valid_mask, *,
+                          interpret=None, w_live: int | None = None):
+    """Single-token KV-cache attention: Pallas window kernel when the
+    window divides a block, dense jnp oracle otherwise (warn-once —
+    the serving loop rounds its window to a block multiple precisely
+    so this path stays hot).
+
+    ``w_live`` (static python int) is the serving loop's bucketed
+    upper bound on written ring-buffer slots: the cache/mask are
+    cropped to it before the kernel, so a mostly-empty window pays
+    only its live blocks in bytes touched, not just blocks skipped.
+    Wraparound (any position ≥ W) must pass ``w_live=None`` / ``>= W``
+    — the serve loop's bucket hits W exactly then.
+    """
+    W = k_cache.shape[1]
+    if w_live is not None:
+        wl = live_window(w_live, W)
+        if wl < W:
+            k_cache = k_cache[:, :wl]
+            v_cache = v_cache[:, :wl]
+            valid_mask = valid_mask[:, :wl]
+            W = wl
+    bw = decode_window_block(W)
+    if bw is None:
+        fallback_warn(
+            f"decode window W={W} is not a {DEFAULT_BLOCK}-multiple: "
+            f"running the dense jnp decode oracle")
+        return ref.decode_attention_ref(q, k_cache, v_cache, valid_mask)
+    return decode_attention(q, k_cache, v_cache, valid_mask, bw=bw,
+                            interpret=interpret)

@@ -74,3 +74,10 @@ def flash_attention_ref(q, k, v, *, causal: bool = True):
     return _chunked_attention(q, k, v, causal=causal,
                               q_chunk=min(128, q.shape[1]),
                               k_chunk=min(128, k.shape[1]))
+
+
+def decode_attention_ref(q, k_cache, v_cache, valid_mask):
+    """Dense full-window decode oracle (the pre-kernel serving path)."""
+    from repro.models.layers import decode_attention_oracle
+
+    return decode_attention_oracle(q, k_cache, v_cache, valid_mask)

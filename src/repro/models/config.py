@@ -100,6 +100,10 @@ class ModelConfig:
     attn_chunk_q: int = 512       # flash-style query block
     attn_chunk_k: int = 1024      # flash-style kv block
     window: int = 8192            # sliding-window size used for long-context decode
+    # attention backend: "auto" (Pallas kernels when they win, jnp
+    # otherwise), "kernel" (force Pallas, warn-once fallback when the
+    # shape is inexpressible), "oracle" (always the jnp reference paths)
+    attn_backend: str = "auto"
 
     # distribution policy
     fsdp: bool = False            # shard weights over the data axis too

@@ -105,27 +105,35 @@ def attn_block(lp, x, positions, cfg: ModelConfig, *, causal=True):
         # explicit seq->heads reshard (all-to-all) around attention
         # instead of letting GSPMD replicate the S^2 compute (§Perf H4)
         q, k, v = (shard_ctx.constrain_heads(t) for t in (q, k, v))
-    o = L.chunked_attention(q, k, v, causal=causal,
+    o = L.prefill_attention(q, k, v, causal=causal,
                             q_chunk=cfg.attn_chunk_q, k_chunk=cfg.attn_chunk_k,
-                            unroll=cfg.unroll_layers)
+                            unroll=cfg.unroll_layers,
+                            backend=cfg.attn_backend)
     o = o.reshape(B, S, cfg.n_heads * cfg.hd()) @ lp["wo"].astype(cfg.cdtype)
     if cfg.seq_shard and shard_ctx.active():
         o = shard_ctx.constrain_seq(o)
     return o
 
 
-def attn_block_decode(lp, x, cache, position, cfg: ModelConfig):
+def attn_block_decode(lp, x, cache, position, cfg: ModelConfig, *,
+                      w_live: int | None = None):
     """One-token self attention against a ring-buffer KV cache.
 
-    cache: {"k": (B, W, Hkv, hd), "v": ...}; position: scalar int32.
+    cache: {"k": (B, W, Hkv, hd), "v": ...}; position: scalar int32
+    (lockstep fixed batch) or (B,) int32 per-slot positions (the
+    continuous-batching serve loop).  ``w_live`` is the loop's static
+    live-slot bound for the cropped decode fast path.
     """
     B, S, _ = x.shape  # S == 1
     q, k, v = _qkv(lp, x, cfg)
-    pos = jnp.full((B, 1), position, jnp.int32)
+    position = jnp.asarray(position, jnp.int32)
+    pos = (jnp.full((B, 1), position, jnp.int32) if position.ndim == 0
+           else position[:, None])
     q = L.apply_rope(q, pos, cfg.rope_theta)
     k = L.apply_rope(k, pos, cfg.rope_theta)
     cache, valid = L.update_kv_cache(cache, k, v, position)
-    o = L.decode_attention(q, cache["k"], cache["v"], valid)
+    o = L.decode_attention(q, cache["k"], cache["v"], valid,
+                           backend=cfg.attn_backend, w_live=w_live)
     y = o.reshape(B, 1, cfg.n_heads * cfg.hd()) @ lp["wo"].astype(cfg.cdtype)
     return y, cache
 
@@ -143,9 +151,10 @@ def layer_fn(lp, x, positions, cfg: ModelConfig):
     return x
 
 
-def layer_fn_decode(lp, x, cache, position, cfg: ModelConfig):
+def layer_fn_decode(lp, x, cache, position, cfg: ModelConfig, *,
+                    w_live: int | None = None):
     a, cache = attn_block_decode(lp, L.rms_norm(x, lp["ln1"], cfg.norm_eps),
-                                 cache, position, cfg)
+                                 cache, position, cfg, w_live=w_live)
     x = x + a
     x = x + mlp_block(lp, L.rms_norm(x, lp["ln2"], cfg.norm_eps), cfg)
     return x, cache
@@ -212,10 +221,11 @@ def prefill(cfg: ModelConfig, params, batch, mlp_fn=None):
         q, k, v = _qkv(lp, h1, cfg)
         q = L.apply_rope(q, positions, cfg.rope_theta)
         k = L.apply_rope(k, positions, cfg.rope_theta)
-        o = L.chunked_attention(q, k, v, causal=True,
+        o = L.prefill_attention(q, k, v, causal=True,
                                 q_chunk=cfg.attn_chunk_q,
                                 k_chunk=cfg.attn_chunk_k,
-                                unroll=cfg.unroll_layers)
+                                unroll=cfg.unroll_layers,
+                                backend=cfg.attn_backend)
         a = o.reshape(B, S, cfg.n_heads * cfg.hd()) @ \
             lp["wo"].astype(cfg.cdtype)
         h = x + a
@@ -240,10 +250,13 @@ def init_cache(cfg: ModelConfig, batch: int, window: int):
     }
 
 
-def decode_step(cfg: ModelConfig, params, cache, token, position, mlp_fn=None):
-    """token: (B, 1) int32; position: scalar int32 (absolute).
+def decode_step(cfg: ModelConfig, params, cache, token, position,
+                mlp_fn=None, *, w_live: int | None = None):
+    """token: (B, 1) int32; position: scalar int32 (absolute, lockstep)
+    or (B,) int32 per-slot positions (continuous batching).
 
-    Returns (logits (B, 1, V), new_cache).
+    Returns (logits (B, 1, V), new_cache).  ``w_live`` is the serving
+    loop's static live-slot bound (see ``layers.decode_attention``).
     """
     x = params["embed"].astype(cfg.cdtype)[token]
 
@@ -251,7 +264,7 @@ def decode_step(cfg: ModelConfig, params, cache, token, position, mlp_fn=None):
         lp, layer_cache = scanned
         a, layer_cache = attn_block_decode(
             lp, L.rms_norm(x, lp["ln1"], cfg.norm_eps), layer_cache,
-            position, cfg)
+            position, cfg, w_live=w_live)
         h = x + a
         fn = mlp_fn or (lambda lp, y: mlp_block(lp, y, cfg))
         h = h + fn(lp, L.rms_norm(h, lp["ln2"], cfg.norm_eps))

@@ -104,10 +104,11 @@ def _mha(lp, xq, xkv, cfg: ModelConfig, *, causal, pre="",
              + lp[f"b{pre}v"].astype(cfg.cdtype))
         k = k.reshape(B, xkv.shape[1], cfg.n_kv_heads, hd)
         v = v.reshape(B, xkv.shape[1], cfg.n_kv_heads, hd)
-    o = L.chunked_attention(q, k, v, causal=causal,
+    o = L.prefill_attention(q, k, v, causal=causal,
                             q_chunk=cfg.attn_chunk_q,
                             k_chunk=cfg.attn_chunk_k,
-                            unroll=cfg.unroll_layers)
+                            unroll=cfg.unroll_layers,
+                            backend=cfg.attn_backend)
     return (o.reshape(B, Sq, cfg.n_heads * hd) @
             lp[f"w{pre}o"].astype(cfg.cdtype)
             + lp[f"b{pre}o"].astype(cfg.cdtype))
@@ -197,10 +198,11 @@ def prefill(cfg: ModelConfig, params, batch):
                                                       cfg.n_kv_heads, hd)
         v = (h @ lp["wv"].astype(cfg.cdtype) + lp["bv"].astype(cfg.cdtype)
              ).reshape(B, Sd, cfg.n_kv_heads, hd)
-        o = L.chunked_attention(q, k, v, causal=True,
+        o = L.prefill_attention(q, k, v, causal=True,
                                 q_chunk=cfg.attn_chunk_q,
                                 k_chunk=cfg.attn_chunk_k,
-                                unroll=cfg.unroll_layers)
+                                unroll=cfg.unroll_layers,
+                                backend=cfg.attn_backend)
         x = x + (o.reshape(B, Sd, cfg.n_heads * hd)
                  @ lp["wo"].astype(cfg.cdtype) + lp["bo"].astype(cfg.cdtype))
         h = L.layer_norm(x, lp["ln2_g"], lp["ln2_b"], cfg.norm_eps)
@@ -250,7 +252,8 @@ def precompute_cross_cache(cfg: ModelConfig, params, enc_out):
     return ks, vs
 
 
-def decode_step(cfg: ModelConfig, params, cache, token, position):
+def decode_step(cfg: ModelConfig, params, cache, token, position, *,
+                w_live: int | None = None):
     x = params["embed"].astype(cfg.cdtype)[token]
     e = cfg.encdec
     pos_clip = jnp.minimum(position, e.dec_seq - 1)
@@ -269,7 +272,8 @@ def decode_step(cfg: ModelConfig, params, cache, token, position):
         v = (h @ lp["wv"].astype(cfg.cdtype) + lp["bv"].astype(cfg.cdtype)
              ).reshape(B, 1, cfg.n_kv_heads, hd)
         newc, valid = L.update_kv_cache({"k": kc, "v": vc}, k, v, position)
-        o = L.decode_attention(q, newc["k"], newc["v"], valid)
+        o = L.decode_attention(q, newc["k"], newc["v"], valid,
+                               backend=cfg.attn_backend, w_live=w_live)
         x = x + (o.reshape(B, 1, cfg.n_heads * hd)
                  @ lp["wo"].astype(cfg.cdtype) + lp["bo"].astype(cfg.cdtype))
         # cross attention against precomputed encoder K/V
@@ -277,7 +281,12 @@ def decode_step(cfg: ModelConfig, params, cache, token, position):
         q = (h @ lp["wxq"].astype(cfg.cdtype) + lp["bxq"].astype(cfg.cdtype)
              ).reshape(B, 1, cfg.n_heads, hd)
         valid_x = jnp.ones((xk.shape[0], xk.shape[1]), bool)
-        o = L.decode_attention(q, xk, xv, valid_x)
+        # enc_seq (1500) is not a block multiple — "auto" keeps the
+        # cross attention on the dense oracle without a forced warn
+        o = L.decode_attention(
+            q, xk, xv, valid_x,
+            backend="oracle" if cfg.attn_backend == "kernel"
+            else cfg.attn_backend)
         x = x + (o.reshape(B, 1, cfg.n_heads * hd)
                  @ lp["wxo"].astype(cfg.cdtype) + lp["bxo"].astype(cfg.cdtype))
         # mlp

@@ -106,10 +106,11 @@ def prefill(cfg: ModelConfig, params, batch):
         q, k, v = dense._qkv(sp, h1, cfg)
         q = L.apply_rope(q, positions, cfg.rope_theta)
         k = L.apply_rope(k, positions, cfg.rope_theta)
-        o = L.chunked_attention(q, k, v, causal=True,
+        o = L.prefill_attention(q, k, v, causal=True,
                                 q_chunk=cfg.attn_chunk_q,
                                 k_chunk=cfg.attn_chunk_k,
-                                unroll=cfg.unroll_layers)
+                                unroll=cfg.unroll_layers,
+                                backend=cfg.attn_backend)
         x = x + o.reshape(B, S, cfg.n_heads * cfg.hd()) @ \
             sp["wo"].astype(cfg.cdtype)
         x = x + dense.mlp_block(
@@ -207,14 +208,16 @@ def init_cache(cfg: ModelConfig, batch: int, window: int):
     }
 
 
-def decode_step(cfg: ModelConfig, params, cache, token, position):
+def decode_step(cfg: ModelConfig, params, cache, token, position, *,
+                w_live: int | None = None):
     x = params["embed"].astype(cfg.cdtype)[token]
     sp = params["shared_attn"]
 
     def group(x, scanned):
         gp, mcache, acache = scanned
         a, acache = dense.attn_block_decode(
-            sp, L.rms_norm(x, sp["ln1"], cfg.norm_eps), acache, position, cfg)
+            sp, L.rms_norm(x, sp["ln1"], cfg.norm_eps), acache, position,
+            cfg, w_live=w_live)
         x = x + a
         x = x + dense.mlp_block(
             sp, L.rms_norm(x, sp["ln2"], cfg.norm_eps), cfg)

@@ -169,8 +169,92 @@ def chunked_attention(
     return out[:, :Sq].astype(q.dtype)
 
 
-def decode_attention(q, k_cache, v_cache, valid_mask):
-    """Single-token attention against a (possibly ring-buffer) KV cache.
+def prefill_attention(q, k, v, *, causal: bool = True, q_chunk: int = 512,
+                      k_chunk: int = 1024, q_offset=0, unroll: bool = False,
+                      backend: str = "auto"):
+    """Prefill/train attention with backend dispatch (same contract as
+    :func:`chunked_attention`).
+
+    ``backend`` (``ModelConfig.attn_backend``): "oracle" always runs the
+    jnp chunked path; "kernel" forces the Pallas flash kernel whenever
+    the shape is expressible (warn-once fallback otherwise); "auto"
+    takes the kernel on compiled (non-interpret) runs — under the CPU
+    interpreter the scanned kernel body always loses to fused jnp, so
+    auto stays on the oracle there.  Eligible shapes: causal
+    self-attention with Sq == Sk and no query offset (both sequences
+    zero-pad to a block multiple exactly — padded keys are causally
+    masked for every real query), or non-causal with Sk already a block
+    multiple (zero-padded keys would enter the softmax; query rows
+    pad/crop freely).  Sharded tracing (shard_ctx active) stays on the
+    oracle, whose GSPMD layout is tuned (§Perf H4).
+    """
+    from repro.kernels import ops
+    from repro.sharding import ctx as shard_ctx
+
+    want_kernel = backend == "kernel" or (
+        backend == "auto" and not ops.interpret_default())
+    if want_kernel and not shard_ctx.active():
+        Sq, Sk = q.shape[1], k.shape[1]
+        offset_free = isinstance(q_offset, int) and q_offset == 0
+        eligible = ((causal and Sq == Sk and offset_free)
+                    or (not causal and Sk % ops.DEFAULT_BLOCK == 0))
+        if eligible:
+            return ops.flash_attention_auto(q, k, v, causal=causal)
+        if backend == "kernel":
+            ops.fallback_warn(
+                f"prefill attention (Sq={Sq}, Sk={Sk}, causal={causal}, "
+                f"q_offset={q_offset}) not expressible by the flash "
+                f"kernel: running the jnp chunked oracle")
+    return chunked_attention(q, k, v, causal=causal, q_chunk=q_chunk,
+                             k_chunk=k_chunk, q_offset=q_offset,
+                             unroll=unroll)
+
+
+def decode_attention(q, k_cache, v_cache, valid_mask, *,
+                     backend: str = "auto", w_live: int | None = None):
+    """Single-token attention against a (possibly ring-buffer) KV cache,
+    with backend dispatch.
+
+    q: (B, 1, Hq, D); caches: (B, W, Hkv, D); valid_mask: (B, W) bool.
+    ``backend`` (``ModelConfig.attn_backend``): "oracle" forces the
+    dense full-window einsum; "kernel" forces the Pallas window kernel
+    whenever W divides a block (warn-once fallback otherwise); "auto"
+    takes the kernel when the window is blocked AND spans at least two
+    blocks, where skipping invalid window blocks pays for the launch.
+    Sharded decode (shard_ctx active) always runs the oracle — its
+    GSPMD cache pinning is tuned there (§Perf H2).
+
+    ``w_live`` is the serving loop's static upper bound on written
+    ring-buffer slots (see ``ops.decode_attention_auto``): the kernel
+    path crops the cache read to the live bucket.  The oracle path
+    ignores it — backend="oracle" is the pristine pre-kernel full-window
+    einsum, which is what the serve benchmark baselines.
+    """
+    from repro.sharding import ctx as shard_ctx
+
+    if backend != "oracle" and not shard_ctx.active():
+        from repro.kernels import ops
+
+        W = k_cache.shape[1]
+        blocked = W % ops.DEFAULT_BLOCK == 0
+        # "auto" under the CPU interpreter needs the crop to win (the
+        # grid scan re-copies the carried cache every step); compiled
+        # runs take the kernel whenever the window spans ≥ 2 blocks
+        wins = W >= 2 * ops.DEFAULT_BLOCK and (
+            not ops.interpret_default() or w_live is not None)
+        if blocked and (backend == "kernel" or wins):
+            return ops.decode_attention_auto(q, k_cache, v_cache,
+                                             valid_mask, w_live=w_live)
+        if backend == "kernel":
+            ops.fallback_warn(
+                f"decode window W={W} is not a {ops.DEFAULT_BLOCK}-"
+                f"multiple: running the dense jnp decode oracle")
+    return decode_attention_oracle(q, k_cache, v_cache, valid_mask)
+
+
+def decode_attention_oracle(q, k_cache, v_cache, valid_mask):
+    """Dense full-window decode attention (the jnp oracle: one einsum
+    over all W slots regardless of fill).
 
     q: (B, 1, Hq, D); caches: (B, W, Hkv, D); valid_mask: (B, W) bool.
     """
@@ -210,32 +294,45 @@ def init_kv_cache(batch: int, window: int, n_kv: int, head_dim: int, dtype):
 
 
 def update_kv_cache(cache, k_new, v_new, position):
-    """Insert one token at ``position % window`` (ring buffer).
+    """Insert one token per row at ``position % window`` (ring buffer).
 
-    k_new/v_new: (B, 1, Hkv, D); position: scalar int32 (absolute).
-    Returns (cache, valid_mask (B, W)).
+    k_new/v_new: (B, 1, Hkv, D); position: scalar int32 (every row at
+    the same absolute position — the lockstep fixed-batch loop) or (B,)
+    int32 per-row positions (the continuous-batching slot loop, where
+    each slot decodes at its own depth).  Returns
+    (cache, valid_mask (B, W)).
     """
     from repro.sharding import ctx as shard_ctx
 
-    W = cache["k"].shape[1]
-    slot = jnp.mod(position, W)
-    # pin cache sharding across the DUS (EXPERIMENTS.md §Perf H2: GSPMD
-    # otherwise fully rematerialises the cache — 1.1 GB AG per layer)
+    B, W = cache["k"].shape[0], cache["k"].shape[1]
+    position = jnp.asarray(position, jnp.int32)
+    # pin cache sharding across the update (EXPERIMENTS.md §Perf H2:
+    # GSPMD otherwise fully rematerialises the cache — 1.1 GB AG/layer)
     k_new = shard_ctx.constrain_cache(k_new, "k")
     v_new = shard_ctx.constrain_cache(v_new, "v")
     kc = shard_ctx.constrain_cache(cache["k"], "k")
     vc = shard_ctx.constrain_cache(cache["v"], "v")
-    k = jax.lax.dynamic_update_slice_in_dim(kc, k_new, slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(vc, v_new, slot, axis=1)
+    idx = jnp.arange(W)
+    if position.ndim == 0:
+        slot = jnp.mod(position, W)
+        k = jax.lax.dynamic_update_slice_in_dim(kc, k_new, slot, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(vc, v_new, slot, axis=1)
+        pos = position[None]                                  # (1,) rows
+    else:
+        # per-row slots: one-hot where-write (a batched DUS would lower
+        # to a gather/scatter pair; the select keeps the cache in place)
+        hit = idx[None, :] == jnp.mod(position, W)[:, None]   # (B, W)
+        k = jnp.where(hit[:, :, None, None], k_new, kc)
+        v = jnp.where(hit[:, :, None, None], v_new, vc)
+        pos = position
     k = shard_ctx.constrain_cache(k, "k")
     v = shard_ctx.constrain_cache(v, "v")
     # slot i holds absolute position p with p % W == i and p <= position;
     # valid iff that p > position - W  (within window) and p >= 0.
-    idx = jnp.arange(W)
-    last_abs = position - jnp.mod(position - idx, W)         # most recent abs pos per slot
-    valid = (last_abs >= 0) & (last_abs > position - W)
-    B = cache["k"].shape[0]
-    valid = jnp.broadcast_to(valid[None, :], (B, W))
+    pos = pos[:, None]
+    last_abs = pos - jnp.mod(pos - idx[None, :], W)  # latest abs pos per slot
+    valid = (last_abs >= 0) & (last_abs > pos - W)
+    valid = jnp.broadcast_to(valid, (B, W))
     return {"k": k, "v": v}, valid
 
 

@@ -230,7 +230,8 @@ def prefill(cfg: ModelConfig, params, batch):
                          mlp_fn=lambda lp, y: moe_block(lp, y, cfg)[0])
 
 
-def decode_step(cfg: ModelConfig, params, cache, token, position):
+def decode_step(cfg: ModelConfig, params, cache, token, position, *,
+                w_live: int | None = None):
     return dense.decode_step(
         cfg, params, cache, token, position,
-        mlp_fn=lambda lp, y: moe_block(lp, y, cfg)[0])
+        mlp_fn=lambda lp, y: moe_block(lp, y, cfg)[0], w_live=w_live)

@@ -61,8 +61,16 @@ class ModelAPI:
     def init_cache(self, batch: int, window: int):
         return self.mod.init_cache(self.cfg, batch, window)
 
-    def decode_step(self, params, cache, token, position):
-        return self.mod.decode_step(self.cfg, params, cache, token, position)
+    def decode_step(self, params, cache, token, position, *,
+                    w_live: int | None = None):
+        """``w_live`` (static int) is the serving loop's bucketed bound
+        on written ring-buffer slots — the cropped decode fast path.
+        SSM caches have no KV window, so the family ignores it."""
+        if w_live is None or self.cfg.family == "ssm":
+            return self.mod.decode_step(self.cfg, params, cache, token,
+                                        position)
+        return self.mod.decode_step(self.cfg, params, cache, token,
+                                    position, w_live=w_live)
 
     def cache_specs(self, batch: int, window: int):
         return jax.eval_shape(lambda: self.init_cache(batch, window))
@@ -150,8 +158,12 @@ class ModelAPI:
         return train_step
 
     def make_serve_step(self) -> Callable:
-        def serve_step(params, cache, token, position):
-            logits, cache = self.decode_step(params, cache, token, position)
+        """Greedy one-token serve step.  ``w_live`` is static (a python
+        int per live-window bucket) — callers jitting the step mark it
+        in ``static_argnames`` so each bucket compiles once."""
+        def serve_step(params, cache, token, position, w_live=None):
+            logits, cache = self.decode_step(params, cache, token,
+                                             position, w_live=w_live)
             next_token = jnp.argmax(logits[:, -1], axis=-1)[:, None]
             return next_token.astype(jnp.int32), cache
         return serve_step

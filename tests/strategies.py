@@ -117,6 +117,46 @@ def build_case(seed: int, n: int, kind: str, convention: str,
     return clients, projs, levels, mask
 
 
+# --------------------------------------------------------------------------
+# decode-attention case space (serving fast path vs dense oracle)
+# --------------------------------------------------------------------------
+# (B, W, Hq, Hkv, D): MHA, GQA 4:1, GQA 8:2, MQA with sub-128 head_dim
+DECODE_SHAPES = ((1, 128, 4, 4, 64), (2, 256, 8, 2, 64),
+                 (2, 256, 16, 4, 64), (2, 128, 4, 1, 32))
+
+
+def decode_shapes():
+    return st.sampled_from(DECODE_SHAPES)
+
+
+def fills():
+    """Tokens written into the ring buffer so far; the builder lets
+    this exceed W to exercise wraparound (position = fill - 1 > W)."""
+    return st.integers(1, 640)
+
+
+def build_decode_case(seed: int, shape: tuple, fill: int):
+    """(q, k_cache, v_cache, valid_mask, position) for one decode step.
+
+    ``fill`` tokens have been written into the W-slot ring buffer;
+    ``position = fill - 1`` is the slot of the newest token.  When
+    ``fill > W`` the buffer has wrapped and every slot is valid —
+    the mask uses the ring-distance formula the model layer derives
+    from the scalar position.
+    """
+    B, W, Hq, Hkv, D = shape
+    k = jax.random.PRNGKey(seed)
+    q = jax.random.normal(k, (B, 1, Hq, D))
+    kc = jax.random.normal(jax.random.fold_in(k, 1), (B, W, Hkv, D))
+    vc = jax.random.normal(jax.random.fold_in(k, 2), (B, W, Hkv, D))
+    pos = fill - 1
+    idx = jnp.arange(W)
+    last_abs = pos - jnp.mod(pos - idx, W)
+    valid = jnp.broadcast_to((last_abs >= 0) & (last_abs > pos - W),
+                             (B, W))
+    return q, kc, vc, valid, pos
+
+
 def build_layer(seed: int, n: int, kind: str, shape: tuple,
                 lead: tuple = ()):
     """Materialize one bare (W, V, P) layer in "oi" kernel layout for

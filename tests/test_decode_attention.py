@@ -1,0 +1,198 @@
+"""Decode-attention serving fast path vs the dense full-window oracle.
+
+Property parity over the shared case space in ``tests/strategies.py``
+(MHA/GQA/MQA shapes, fills past the ring-buffer wraparound point) plus
+hand-picked regressions: the two Pallas grid layouts, the static
+live-window crop, all-invalid masks, real ``update_kv_cache``-driven
+wraparound, vector-vs-scalar cache updates, and the prefill backend
+dispatch (kernel parity + forced-kernel warn-once fallback).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+import strategies as strat
+from repro.kernels import ops
+from repro.models import layers as L
+
+
+def _oracle(q, kc, vc, valid):
+    return L.decode_attention_oracle(q, kc, vc, valid)
+
+
+# --------------------------------------------------------------------------
+# property parity: kernel auto path vs oracle over the case space
+# --------------------------------------------------------------------------
+@given(strat.seeds(), strat.decode_shapes(), strat.fills())
+@settings(max_examples=8, deadline=None)
+def test_decode_attention_property_parity(seed, shape, fill):
+    q, kc, vc, valid, _ = strat.build_decode_case(seed, shape, fill)
+    got = ops.decode_attention_auto(q, kc, vc, valid)
+    want = _oracle(q, kc, vc, valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+@given(strat.seeds(), strat.decode_shapes(), strat.fills())
+@settings(max_examples=8, deadline=None)
+def test_decode_attention_model_dispatcher_parity(seed, shape, fill):
+    """The layers.decode_attention backend dispatcher ("kernel") agrees
+    with its own oracle, including the w_live cropped variant."""
+    q, kc, vc, valid, pos = strat.build_decode_case(seed, shape, fill)
+    W = shape[1]
+    want = _oracle(q, kc, vc, valid)
+    got = L.decode_attention(q, kc, vc, valid, backend="kernel",
+                             w_live=min(pos + 1, W))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# hand-picked regressions
+# --------------------------------------------------------------------------
+def test_wraparound_via_real_cache_updates():
+    """Drive a (W=128)-slot ring past wraparound with the real
+    update_kv_cache, checking kernel/oracle parity at each probe."""
+    B, W, Hkv, Hq, D = 2, 128, 2, 4, 16
+    k = jax.random.PRNGKey(0)
+    cache = {"k": jnp.zeros((B, W, Hkv, D)),
+             "v": jnp.zeros((B, W, Hkv, D))}
+    valid = None
+    for pos in range(W + 40):                 # wraps at pos >= W
+        kk = jax.random.fold_in(k, pos)
+        k_new = jax.random.normal(kk, (B, 1, Hkv, D))
+        v_new = jax.random.normal(jax.random.fold_in(kk, 1),
+                                  (B, 1, Hkv, D))
+        cache, valid = L.update_kv_cache(cache, k_new, v_new,
+                                         jnp.int32(pos))
+    assert bool(jnp.all(valid))               # fully wrapped: all valid
+    q = jax.random.normal(jax.random.fold_in(k, 999), (B, 1, Hq, D))
+    got = ops.decode_attention_auto(q, cache["k"], cache["v"], valid)
+    want = _oracle(q, cache["k"], cache["v"], valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_all_invalid_rows_are_zero_and_finite():
+    """A row with no valid slot returns exact zeros from the kernel
+    (documented divergence: the oracle averages v).  No NaNs either
+    way — the contract the serve loop relies on for idle slots."""
+    B, W, Hq, Hkv, D = 2, 256, 8, 2, 64
+    k = jax.random.PRNGKey(1)
+    q = jax.random.normal(k, (B, 1, Hq, D))
+    kc = jax.random.normal(jax.random.fold_in(k, 1), (B, W, Hkv, D))
+    vc = jax.random.normal(jax.random.fold_in(k, 2), (B, W, Hkv, D))
+    valid = jnp.zeros((B, W), bool).at[1, :5].set(True)  # row 0 empty
+    got = np.asarray(ops.decode_attention_auto(q, kc, vc, valid))
+    assert np.all(np.isfinite(got))
+    np.testing.assert_array_equal(got[0], np.zeros_like(got[0]))
+    want = np.asarray(_oracle(q, kc, vc, valid))
+    np.testing.assert_allclose(got[1], want[1], atol=1e-4, rtol=1e-4)
+
+
+def test_gqa_grouping_matches_oracle_per_head():
+    """GQA group of 4: each q head must attend through ITS kv head —
+    a transposed grouping would still have matching shapes."""
+    B, W, Hq, Hkv, D = 1, 128, 8, 2, 32
+    k = jax.random.PRNGKey(2)
+    q = jax.random.normal(k, (B, 1, Hq, D))
+    kc = jax.random.normal(jax.random.fold_in(k, 1), (B, W, Hkv, D))
+    vc = jax.random.normal(jax.random.fold_in(k, 2), (B, W, Hkv, D))
+    valid = jnp.ones((B, W), bool)
+    got = np.asarray(ops.decode_attention_auto(q, kc, vc, valid))
+    # per-head dense reference: head h uses kv head h // (Hq // Hkv)
+    g = Hq // Hkv
+    for h in range(Hq):
+        s = np.einsum("d,wd->w", np.asarray(q)[0, 0, h],
+                      np.asarray(kc)[0, :, h // g]) / np.sqrt(D)
+        p = np.exp(s - s.max())
+        p /= p.sum()
+        want_h = np.einsum("w,wd->d", p, np.asarray(vc)[0, :, h // g])
+        np.testing.assert_allclose(got[0, 0, h], want_h, atol=1e-4,
+                                   rtol=1e-4)
+
+
+def test_fold_batch_layouts_agree():
+    """The interpret-oriented whole-batch grid and the fine
+    (TPU-shaped) per-(b,h) grid compute the same thing."""
+    B, W, Hq, Hkv, D = 2, 256, 8, 2, 64
+    q, kc, vc, valid, _ = strat.build_decode_case(7, (B, W, Hq, Hkv, D),
+                                                  200)
+    batched = ops.decode_attention(q, kc, vc, valid, bw=128,
+                                   fold_batch=True)
+    fine = ops.decode_attention(q, kc, vc, valid, bw=128,
+                                fold_batch=False)
+    np.testing.assert_allclose(np.asarray(batched), np.asarray(fine),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_w_live_crop_parity():
+    """Static live-window crop (the serving fast path) is exact when
+    every valid slot lies below the crop."""
+    B, W, Hq, Hkv, D = 2, 512, 8, 2, 64
+    fill = 130                                 # bucket -> 256 < W
+    q, kc, vc, valid, pos = strat.build_decode_case(11,
+                                                    (B, W, Hq, Hkv, D),
+                                                    fill)
+    assert ops.live_window(fill, W) == 256
+    got = ops.decode_attention_auto(q, kc, vc, valid, w_live=pos + 1)
+    want = _oracle(q, kc, vc, valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_vector_and_scalar_cache_updates_agree():
+    """Per-row (B,) positions (slot loop) write the same cache and
+    mask as the scalar lockstep path when all rows share a position."""
+    B, W, Hkv, D = 3, 64, 2, 16
+    k = jax.random.PRNGKey(4)
+    cache = {"k": jax.random.normal(k, (B, W, Hkv, D)),
+             "v": jax.random.normal(jax.random.fold_in(k, 1),
+                                    (B, W, Hkv, D))}
+    k_new = jax.random.normal(jax.random.fold_in(k, 2), (B, 1, Hkv, D))
+    v_new = jax.random.normal(jax.random.fold_in(k, 3), (B, 1, Hkv, D))
+    for pos in (5, W + 7):                     # pre- and post-wrap
+        c_s, m_s = L.update_kv_cache(cache, k_new, v_new,
+                                     jnp.int32(pos))
+        c_v, m_v = L.update_kv_cache(cache, k_new, v_new,
+                                     jnp.full((B,), pos, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(m_s), np.asarray(m_v))
+        for leaf in ("k", "v"):
+            np.testing.assert_array_equal(np.asarray(c_s[leaf]),
+                                          np.asarray(c_v[leaf]))
+
+
+# --------------------------------------------------------------------------
+# prefill backend dispatch
+# --------------------------------------------------------------------------
+def test_prefill_backend_kernel_matches_oracle():
+    B, S, Hq, Hkv, D = 2, 256, 8, 2, 64
+    k = jax.random.PRNGKey(5)
+    q = jax.random.normal(k, (B, S, Hq, D))
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (B, S, Hkv, D))
+    v = jax.random.normal(jax.random.fold_in(k, 2), (B, S, Hkv, D))
+    want = L.prefill_attention(q, kk, v, causal=True, backend="oracle")
+    got = L.prefill_attention(q, kk, v, causal=True, backend="kernel")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_prefill_forced_kernel_warns_on_ineligible_shape():
+    """backend="kernel" on a shape the flash kernel cannot express
+    (non-causal, Sk not a block multiple) falls back with a warning —
+    never silently."""
+    import repro.kernels.ops as ops_mod
+    B, Sq, Sk, H, D = 1, 64, 100, 2, 32
+    k = jax.random.PRNGKey(6)
+    q = jax.random.normal(k, (B, Sq, H, D))
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (B, Sk, H, D))
+    v = jax.random.normal(jax.random.fold_in(k, 2), (B, Sk, H, D))
+    ops_mod._warned_fallbacks.clear()
+    with pytest.warns(RuntimeWarning):
+        got = L.prefill_attention(q, kk, v, causal=False,
+                                  backend="kernel")
+    want = L.prefill_attention(q, kk, v, causal=False, backend="oracle")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,154 @@
+"""Client-axis scaling of MA-Echo aggregation (ISSUE 10 tentpole).
+
+Sweeps the client count N ∈ {8, 64, 512, 4096} over one factored-
+projector leaf and measures, for the unchunked jnp path (full
+(N, out, in) residual resident) vs the client-chunked sweep
+(``ops.maecho_streaming_gram_chunked`` + apply, chunk clients
+resident), BOTH wall-clock and the compiled program's peak temp-
+buffer footprint (``compiled.memory_analysis().temp_size_in_bytes``)
+— the rows carry ``peak_bytes`` and the regression gate checks the
+two metrics independently.
+
+The timed/measured unit is one leaf-level gram + apply with a FIXED
+uniform α (no QP inside the jit), so the memory analysis isolates
+exactly the residual-liveness difference the chunking targets.  The
+QP scaling rows time ``qp.solve_qp`` vs ``qp.solve_qp_blocked`` on
+the (N, N) Gram separately.
+
+Acceptance rows (asserted here, so a regression fails the suite):
+at N=512 / chunk=64 the chunked path's peak temp bytes must be ≥4×
+lower than the unchunked path's at ≤1.3× its wall-clock; the N=4096
+row (chunked only — the unchunked residual would be 4096× the leaf)
+runs at quick-scale dims in every mode and must simply complete.
+
+Rows land in ``BENCH_largeN_agg.json`` via ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+
+CHUNK = 64
+
+
+def _case(N: int, out_d: int, in_d: int, rank: int):
+    k = jax.random.PRNGKey(N)
+    W = jax.random.normal(k, (out_d, in_d)) * 0.3
+    V = jax.random.normal(jax.random.fold_in(k, 1),
+                          (N, out_d, in_d)) * 0.3
+    U = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(k, 2),
+                                        (N, in_d, rank)))[0]
+    s = jax.random.uniform(jax.random.fold_in(k, 3), (N, rank),
+                           minval=0.1, maxval=1.0)
+    return W, V, {"U": U, "s": s}
+
+
+def _unchunked_step(W, V, P):
+    """The oracle-shaped baseline: full (N, out, in) fp32 residual
+    materialized for the Gram, again for Eq. 7/11 — the O(N) peak the
+    chunked sweep removes."""
+    from repro.kernels import ref
+
+    N = V.shape[0]
+    alpha = jnp.full((N,), 1.0 / N, jnp.float32)
+    G = ref.maecho_gram_ref(W, V, P)
+    Wn = ref.maecho_update_ref_any(W, V, P, alpha, eta=0.5)
+    Vn = ref.maecho_v_update_ref(Wn, V, P, 0.5, norm=True)
+    return G, Wn, Vn
+
+
+def _chunked_step(W, V, P, chunk: int):
+    from repro.kernels import ops
+
+    N = V.shape[0]
+    alpha = jnp.full((N,), 1.0 / N, jnp.float32)
+    G, ctx = ops.maecho_streaming_gram_chunked(W, V, P, chunk=chunk)
+    Wn, Vn = ops.maecho_streaming_apply_chunked(alpha, ctx, eta=0.5,
+                                                frac=0.5, norm=True)
+    return G, Wn, Vn
+
+
+def _measure(fn, args, reps: int = 3):
+    """(best-of wall-clock µs, peak temp bytes) of one jitted call."""
+    jitted = jax.jit(fn)
+    mem = jitted.lower(*args).compile().memory_analysis()
+    peak = int(getattr(mem, "temp_size_in_bytes", 0) or 0)
+    out = jitted(*args)
+    jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+    best = 1e30
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = jitted(*args)
+        jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, peak
+
+
+def _qp_rows(N: int, tag: str, iters: int):
+    from repro.core import qp
+
+    k = jax.random.PRNGKey(N + 1)
+    X = jax.random.normal(k, (N, min(N, 256))) * 0.5
+    G = X @ X.T + 0.1 * jnp.eye(N)
+    flat_us, _ = _measure(
+        lambda g: qp.solve_qp(g, 0.6, iters=iters), (G,))
+    blk_us, _ = _measure(
+        lambda g: qp.solve_qp_blocked(g, 0.6, iters=iters,
+                                      row_block=CHUNK), (G,))
+    row(f"largeN_agg/qp_flat_{tag}", flat_us, f"iters={iters}")
+    row(f"largeN_agg/qp_blocked_{tag}", blk_us,
+        f"iters={iters};rb={CHUNK}")
+
+
+def run(quick: bool = False):
+    out_d, in_d, rank = (128, 128, 8) if quick else (256, 256, 16)
+    sweep = [8, 64] if quick else [8, 64, 512]
+
+    ratio = {}
+    for N in sweep:
+        W, V, P = _case(N, out_d, in_d, rank)
+        tag = f"{out_d}x{in_d}_N{N}"
+        un_us, un_peak = _measure(_unchunked_step, (W, V, P))
+        ch_us, ch_peak = _measure(
+            lambda W, V, P: _chunked_step(W, V, P, CHUNK), (W, V, P))
+        row(f"largeN_agg/unchunked_{tag}", un_us, "path=oracle",
+            peak_bytes=un_peak)
+        row(f"largeN_agg/chunked{CHUNK}_{tag}", ch_us, "path=chunked",
+            peak_bytes=ch_peak)
+        ratio[N] = (un_peak / max(ch_peak, 1), ch_us / max(un_us, 1))
+
+    if not quick:
+        # the tentpole acceptance: chunking at N=512 must actually buy
+        # the memory (≥4×) without giving the time back (≤1.3×)
+        mem_x, time_x = ratio[512]
+        row("largeN_agg/ratio_512_c64", 0,
+            f"mem_x={mem_x:.2f};time_x={time_x:.2f}")
+        assert mem_x >= 4.0, (
+            f"chunked peak memory only {mem_x:.2f}x below unchunked "
+            f"at N=512/chunk={CHUNK} (need >=4x)")
+        assert time_x <= 1.3, (
+            f"chunked wall-clock {time_x:.2f}x the unchunked path at "
+            f"N=512/chunk={CHUNK} (need <=1.3x)")
+
+    _qp_rows(64 if quick else 512, "N64" if quick else "N512",
+             iters=60 if quick else 200)
+
+    # the cross-device headline: N=4096 completes, chunked only, at
+    # quick-scale dims in EVERY mode — the unchunked residual
+    # (4096·out·in fp32) is the thing this bench exists to delete
+    N = 4096
+    W, V, P = _case(N, 32, 32, 8)
+    ch_us, ch_peak = _measure(
+        lambda W, V, P: _chunked_step(W, V, P, CHUNK), (W, V, P),
+        reps=1)
+    row(f"largeN_agg/chunked{CHUNK}_32x32_N{N}", ch_us,
+        "path=chunked;quick_scale", peak_bytes=ch_peak)
+    _qp_rows(N, f"N{N}", iters=30)
+
+
+if __name__ == "__main__":
+    run()

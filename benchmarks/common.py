@@ -76,11 +76,19 @@ def ensemble_acc(spec, clients, data) -> float:
 _ROWS: list[dict] = []
 
 
-def row(name: str, us: float, derived) -> str:
+def row(name: str, us: float, derived, peak_bytes=None) -> str:
+    """Emit one bench row.  ``peak_bytes`` (optional) records the
+    compiled program's peak temp-buffer footprint alongside the time —
+    rows carrying it are gated on BOTH metrics by
+    ``tools/check_bench_regression.py``; rows without it keep the
+    legacy time-only shape."""
     line = f"{name},{us:.0f},{derived}"
     print(line, flush=True)
-    _ROWS.append({"name": name, "us_per_call": round(us),
-                  "derived": str(derived)})
+    entry = {"name": name, "us_per_call": round(us),
+             "derived": str(derived)}
+    if peak_bytes is not None:
+        entry["peak_bytes"] = int(peak_bytes)
+    _ROWS.append(entry)
     return line
 
 

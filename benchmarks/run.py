@@ -13,7 +13,8 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_kernels, bench_maecho_agg, bench_qp_batch,
+from benchmarks import (bench_kernels, bench_largeN_agg,
+                        bench_maecho_agg, bench_qp_batch,
                         bench_serve, bench_sharded2d_agg,
                         bench_sharded_agg, bench_stacked_agg, fig4_cvae,
                         fig8_mu, fig9_multiround, roofline_report,
@@ -30,6 +31,7 @@ SUITES = {
     "fig8": fig8_mu.run,
     "fig9": fig9_multiround.run,
     "kernels": bench_kernels.run,
+    "largeN_agg": bench_largeN_agg.run,
     "maecho_agg": bench_maecho_agg.run,
     "qp_batch": bench_qp_batch.run,
     "serve": bench_serve.run,
@@ -47,6 +49,7 @@ SUITES = {
 # listed.
 PERF_SUITES = [
     "kernels",
+    "largeN_agg",
     "maecho_agg",
     "qp_batch",
     "serve",

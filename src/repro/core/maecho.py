@@ -153,6 +153,14 @@ class MAEchoConfig:
     # (the gram rstore is N·bo·bi fp32).  The sharded pipeline keeps
     # DEFAULT_BLOCK (its out-padding granularity is block × axis_size).
     kernel_block: int = 0
+    # client-axis chunk for the Gram/apply sweeps; 0 = unchunked.  When
+    # set, eligible leaves accumulate their (N, N) Gram over blocks of
+    # ``client_chunk`` clients (only that many residuals resident per
+    # step — the cross-device large-N mode) and the QP tiles its
+    # Gram-vector products over the same block edge.  Clamped to N per
+    # leaf at plan time; composes with "sharded" (rows × client
+    # blocks) but not "sharded2d" (degrades to the 1-D shard, warned).
+    client_chunk: int = 0
 
 
 # --------------------------------------------------------------------------
@@ -198,7 +206,8 @@ def _qp_alpha(G, cfg: MAEchoConfig, mask=None):
     by hand.  (The jitted wrapper traces inline under the enclosing
     jit; the whole aggregation still compiles as one program.)
     ``mask`` is the leaf's participation mask (ragged cohorts)."""
-    return qp_mod.solve_qp(G, cfg.C, iters=cfg.qp_iters, mask=mask)
+    return qp_mod.solve_qp(G, cfg.C, iters=cfg.qp_iters, mask=mask,
+                           row_block=cfg.client_chunk)
 
 
 def _flatten_stack(W, V, P, levels: int):
@@ -368,6 +377,76 @@ def _leaf_apply_stacked(alpha, ctx, cfg: MAEchoConfig,
             Vn.reshape(Vn.shape[:1] + lead + Vn.shape[-2:]))
 
 
+def _leaf_gram_chunked(W, V, P, lp: LeafPlan, cfg: MAEchoConfig,
+                       convention: str, mesh):
+    """Gram half for a leaf with a compiled ``client_chunk``: the
+    (N, N) Gram accumulates over blocks of clients, so peak residual
+    residency is O(chunk), not O(N) — the cross-device large-N mode.
+    The chunk sweep composes with the leaf's route: "kernel" streams
+    each (chunk, chunk) pair block through the Pallas cross-Gram,
+    "sharded" additionally splits out-rows over ``cfg.mesh_axis``
+    (still ONE psum per leaf per iteration), everything else — the
+    oracle and the sub-tile shapes — runs the jnp chunk sweep."""
+    from repro.kernels import ops
+
+    chunk = lp.client_chunk
+    if lp.levels > 0:
+        Wf, Vf, Pf, lead = _flatten_stack(W, V, P, lp.levels)
+        Wk, Vk, Pk = _to_kernel_layout(Wf, Vf, Pf, convention, levels=1)
+        if lp.route == "sharded":
+            G, ctx = ops.maecho_sharded_gram_chunked(
+                Wk, Vk, Pk, mesh=mesh, axis=cfg.mesh_axis, chunk=chunk,
+                stacked=True)
+        else:
+            G, ctx = ops.maecho_streaming_gram_chunked_stacked(
+                Wk, Vk, Pk, chunk=chunk)
+        return (G.reshape(lead + G.shape[-2:]),
+                ("stkchunk", lp.route, lead, ctx))
+    Wk, Vk, Pk = _to_kernel_layout(W, V, P, convention)
+    if lp.route == "sharded":
+        G, ctx = ops.maecho_sharded_gram_chunked(
+            Wk, Vk, Pk, mesh=mesh, axis=cfg.mesh_axis, chunk=chunk)
+    else:
+        G, ctx = ops.maecho_streaming_gram_chunked(
+            Wk, Vk, Pk, chunk=chunk,
+            use_kernel=(lp.route == "kernel"))
+    return G, ("chunkroute", lp.route, ctx)
+
+
+def _leaf_apply_chunked(alpha, ctx, cfg: MAEchoConfig, convention: str,
+                        mesh):
+    """Update half for a chunked leaf: Eq. 7 accumulates over chunk
+    residuals, Eq. 11 rebuilds each chunk's anchors — the full-N
+    residual never materializes."""
+    from repro.kernels import ops
+
+    kw = dict(eta=cfg.eta, frac=cfg.mu / (1.0 + cfg.mu), norm=cfg.norm,
+              eps=cfg.eps)
+    if ctx[0] == "stkchunk":
+        _, route, lead, inner = ctx
+        af = alpha.reshape((-1,) + alpha.shape[-1:])
+        if route == "sharded":
+            Wn, Vn = ops.maecho_sharded_apply_chunked(
+                af, inner, mesh=mesh, axis=cfg.mesh_axis, stacked=True,
+                **kw)
+        else:
+            Wn, Vn = ops.maecho_streaming_apply_chunked_stacked(
+                af, inner, **kw)
+        if convention == "io":
+            Wn, Vn = jnp.swapaxes(Wn, -1, -2), jnp.swapaxes(Vn, -1, -2)
+        return (Wn.reshape(lead + Wn.shape[-2:]),
+                Vn.reshape(Vn.shape[:1] + lead + Vn.shape[-2:]))
+    _, route, inner = ctx
+    if route == "sharded":
+        Wn, Vn = ops.maecho_sharded_apply_chunked(
+            alpha, inner, mesh=mesh, axis=cfg.mesh_axis, **kw)
+    else:
+        Wn, Vn = ops.maecho_streaming_apply_chunked(alpha, inner, **kw)
+    if convention == "io":
+        return Wn.T, jnp.swapaxes(Vn, 1, 2)
+    return Wn, Vn
+
+
 def _leaf_gram_oracle(W, V, P, convention: str):
     """Reference gram half: materializes the residual once and returns
     it as the reuse context for :func:`_leaf_apply_oracle` (the same
@@ -416,6 +495,8 @@ def _leaf_gram(W, V, P, lp: LeafPlan, cfg: MAEchoConfig,
     QP batch axis — and ``ctx`` is the per-leaf reuse payload for
     :func:`_leaf_apply` (the oracle residual, or the kernel/sharded
     pipelines' padded-operand context)."""
+    if lp.client_chunk:
+        return _leaf_gram_chunked(W, V, P, lp, cfg, convention, mesh)
     route = lp.route
     if route == "oracle":
         if lp.levels > 0:
@@ -447,6 +528,8 @@ def _leaf_apply(W, V, P, ctx, alpha, lp: LeafPlan, cfg: MAEchoConfig,
     back through Eq. 7 / Eq. 11 on the route the plan compiled.
     ``alpha`` carries the leaf's stacked-layer axes in front of its
     trailing N, mirroring the gram layout."""
+    if lp.client_chunk:
+        return _leaf_apply_chunked(alpha, ctx, cfg, convention, mesh)
     route = lp.route
     if route == "oracle":
         if lp.levels > 0:
@@ -551,15 +634,17 @@ def _maecho_jit(W0, V0, P, cfg: MAEchoConfig, convention: str,
             # (broadcast over its scanned layers) rides the solver's
             # validity masking instead of the prefix n_valid.
             if masks is None:
-                alphas = qp_mod.solve_qp_batched(Gstack, cfg.C,
-                                                 cfg.qp_iters, n_valid)
+                alphas = qp_mod.solve_qp_batched(
+                    Gstack, cfg.C, cfg.qp_iters, n_valid,
+                    row_block=cfg.client_chunk)
             else:
                 rows = [jnp.broadcast_to(m, (math.prod(g.shape[:-2]),)
                                          + m.shape)
                         for g, m in zip(grams, flatM)]
                 alphas = qp_mod.solve_qp_batched(
                     Gstack, cfg.C, cfg.qp_iters,
-                    mask=jnp.concatenate(rows, 0))
+                    mask=jnp.concatenate(rows, 0),
+                    row_block=cfg.client_chunk)
             # Phase 3: … scattered back through each leaf's Eq. 7/11.
             out, ofs = [], 0
             for w, v, p, lp, ctx, g in zip(flatW, flatV, flatP,
@@ -612,11 +697,18 @@ def dispatch_summary(W0: Pytree, P: Pytree, levels_tree: Pytree,
     work, routing is static-shape-only.  Returns ``(per_leaf,
     counts)``: ``per_leaf`` is a list of ``(path, levels, route)``
     with route in ``plan.ROUTES`` ({"oracle", "kernel", "stacked",
-    "sharded", "sharded2d"}); ``counts`` maps route -> leaf count.
+    "sharded", "sharded2d"}); ``counts`` maps route -> leaf count,
+    plus a ``"chunked"`` entry (the number of leaves sweeping their
+    client axis in ``cfg.client_chunk`` blocks) whenever chunking is
+    active.
     """
     plan = compile_plan(W0, P, levels_tree, cfg, convention, backend,
                         mesh)
-    return plan.per_leaf(), plan.route_counts()
+    counts = plan.route_counts()
+    chunked = sum(1 for lp in plan.leaves if lp.client_chunk)
+    if chunked:
+        counts["chunked"] = chunked
+    return plan.per_leaf(), counts
 
 
 def _default_mesh(axis_name: str, in_axis_name: Optional[str] = None):

@@ -83,7 +83,10 @@ class LeafPlan:
     ``DEFAULT_BLOCK`` otherwise; ``out_axes`` / ``in_axes`` are the
     mesh axis names sharding the leaf (empty on unsharded routes), and
     their concatenation is exactly the psum axis set of the leaf's one
-    Gram collective."""
+    Gram collective.  ``client_chunk`` is the effective client-axis
+    chunk (``cfg.client_chunk`` clamped to N; 0 = unchunked): when set,
+    the leaf's Gram accumulates over blocks of clients so only
+    ``client_chunk`` projections are resident per step."""
     path: str
     levels: int                 # leading stacked-layer axes (post-flatten)
     route: str                  # one of ROUTES
@@ -93,6 +96,7 @@ class LeafPlan:
     block: int = 0
     out_axes: tuple = ()
     in_axes: tuple = ()
+    client_chunk: int = 0
 
     @property
     def psum_axes(self) -> tuple:
@@ -178,12 +182,25 @@ def leaf_route(W, P, levels: int, cfg, convention: str, backend: str,
                       mesh).route
 
 
+def _eff_chunk(cfg, P, eligible: bool) -> int:
+    """Effective client-axis chunk for one leaf: ``cfg.client_chunk``
+    clamped to the client count N (chunk ≥ N would only manufacture
+    dead padded clients), 0 on ineligible leaves — 1-D biases and
+    other oracle-only shapes never chunk."""
+    ck = int(getattr(cfg, "client_chunk", 0) or 0)
+    if not eligible or ck <= 0:
+        return 0
+    n = (P["U"].shape[0] if isinstance(P, dict) else P.shape[0])
+    return min(ck, int(n))
+
+
 def _plan_leaf(path: str, W, P, levels: int, cfg, convention: str,
                backend: str, mesh) -> LeafPlan:
     from repro.kernels import ops
 
     eligible = kernel_eligible(W, P, levels)
     kind = proj_kind(P, levels) if eligible else "none"
+    ck = _eff_chunk(cfg, P, eligible)
     if not eligible or backend == "oracle":
         if eligible is False and backend not in ("oracle", "auto") \
                 and getattr(W, "ndim", 0) > 1:
@@ -194,11 +211,21 @@ def _plan_leaf(path: str, W, P, levels: int, cfg, convention: str,
                 f"levels={levels}) ineligible for backend="
                 f"{backend!r}: falling back to the "
                 f"{'vmapped ' if levels else ''}jnp oracle")
-        return LeafPlan(path, levels, "oracle", kind)
+        return LeafPlan(path, levels, "oracle", kind, client_chunk=ck)
     out_d, in_d = kernel_dims(W, convention)
     sub_tile = min(out_d, in_d) < ops.DEFAULT_BLOCK
 
-    if backend == "sharded2d" and _mesh_has(mesh, cfg.mesh_axis):
+    if backend == "sharded2d" and ck:
+        # the 2-D shard splits the in-columns, but the chunked residual
+        # sweep contracts full rows per client block — the combination
+        # has no kernel.  Degrade loudly to the 1-D out-dim shard,
+        # which composes with chunking (rows × client blocks).
+        ops.fallback_warn(
+            f"leaf {path or '<leaf>'} requests backend='sharded2d' "
+            f"with client_chunk={ck}: the 2-D shard does not compose "
+            f"with client chunking — degrading to the 1-D out-dim "
+            f"shard")
+    elif backend == "sharded2d" and _mesh_has(mesh, cfg.mesh_axis):
         if _mesh_has(mesh, cfg.mesh_in_axis):
             from repro.sharding.rules import sharded_ok2d
 
@@ -225,7 +252,8 @@ def _plan_leaf(path: str, W, P, levels: int, cfg, convention: str,
                           warn=True):
             return LeafPlan(path, levels, "sharded", kind, out_d, in_d,
                             ops.DEFAULT_BLOCK,
-                            _axis_names(cfg.mesh_axis))
+                            _axis_names(cfg.mesh_axis),
+                            client_chunk=ck)
     # single-device streaming rule: "kernel" forces it for any
     # tileable leaf; "auto" (and the sharded backends' fallback)
     # promotes only leaves big enough to tile.  Sub-tile leaves run
@@ -235,7 +263,7 @@ def _plan_leaf(path: str, W, P, levels: int, cfg, convention: str,
     if not sub_tile:
         block = _eff_tile(cfg, out_d, in_d)
         return LeafPlan(path, levels, "stacked" if levels else "kernel",
-                        kind, out_d, in_d, block)
+                        kind, out_d, in_d, block, client_chunk=ck)
     if backend not in ("oracle", "auto"):
         ops.fallback_warn(
             f"{'stacked ' if levels else ''}leaf {path or '<leaf>'} "
@@ -244,7 +272,8 @@ def _plan_leaf(path: str, W, P, levels: int, cfg, convention: str,
             f"{ops.DEFAULT_BLOCK}-tile for backend={backend!r}: "
             f"running the {'vmapped ' if levels else ''}jnp oracle "
             f"instead of the streaming kernels")
-    return LeafPlan(path, levels, "oracle", kind, out_d, in_d)
+    return LeafPlan(path, levels, "oracle", kind, out_d, in_d,
+                    client_chunk=ck)
 
 
 def _eff_tile(cfg, out_d: int, in_d: int) -> int:

@@ -207,6 +207,50 @@ def maecho_gram_left(A, UT, *, bo: int = 128, bi: int = 128,
     )(A, UT)
 
 
+def _gram_cross_kernel(a_ref, b_ref, out_ref, acc_ref):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...].astype(jnp.float32), b_ref[...].astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(0) - 1)
+    def _finalize():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def maecho_gram_cross(Ra, Rb, *, bd: int = 512, interpret: bool = True):
+    """Cross-Gram block between two client chunks' flat residuals.
+
+    Ra: (ca, D); Rb: (cb, D) — flattened residual rows for chunks a and
+    b.  Returns the fp32 (ca, cb) block G[i, j] = ⟨Ra_i, Rb_j⟩ by
+    streaming the feature axis through VMEM in ``bd``-wide slabs (the
+    ``rank_update.py`` tiled-accumulator idiom): only one (ca, bd) +
+    (cb, bd) operand pair is resident per grid step, never the full
+    (N, D) residual set — the client-chunked Gram path's building
+    block.
+    """
+    ca, D = Ra.shape
+    cb = Rb.shape[0]
+    bd = min(bd, D)
+    assert D % bd == 0, "caller pads the flat feature axis to bd"
+    return pl.pallas_call(
+        _gram_cross_kernel,
+        grid=(D // bd,),
+        in_specs=[pl.BlockSpec((ca, bd), lambda k: (0, k)),
+                  pl.BlockSpec((cb, bd), lambda k: (0, k))],
+        out_specs=pl.BlockSpec((ca, cb), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ca, cb), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((ca, cb), jnp.float32)],
+        interpret=interpret,
+    )(Ra, Rb)
+
+
 def _gram_diag_kernel(w_ref, v_ref, p_ref, out_ref, gacc_ref,
                       *, n_clients: int, off: int = 0):
     o, j = pl.program_id(off), pl.program_id(off + 1)

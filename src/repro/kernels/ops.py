@@ -46,7 +46,12 @@ __all__ = [
     "maecho_sharded_apply", "maecho_sharded_gram_stacked",
     "maecho_sharded_apply_stacked", "maecho_sharded2d_gram",
     "maecho_sharded2d_apply", "maecho_sharded2d_gram_stacked",
-    "maecho_sharded2d_apply_stacked", "sharded_ok", "axis_size_of",
+    "maecho_sharded2d_apply_stacked", "maecho_gram_cross",
+    "maecho_streaming_gram_chunked", "maecho_streaming_apply_chunked",
+    "maecho_streaming_gram_chunked_stacked",
+    "maecho_streaming_apply_chunked_stacked",
+    "maecho_sharded_gram_chunked", "maecho_sharded_apply_chunked",
+    "sharded_ok", "axis_size_of",
     "fallback_warn", "flash_attention_auto", "interpret_default",
     "decode_attention", "decode_attention_auto", "decode_window_block",
     "live_window", "DEFAULT_BLOCK",
@@ -209,6 +214,11 @@ def maecho_v_update_diag(W, V, p, *, frac: float, norm: bool = False,
     return _mv.maecho_v_update_diag(W, V, p, frac=frac, norm=norm,
                                     eps=eps, bo=bo, bi=bi,
                                     interpret=_resolve(interpret))
+
+
+def maecho_gram_cross(Ra, Rb, *, bd: int = 512, interpret=None):
+    return _mg.maecho_gram_cross(Ra, Rb, bd=bd,
+                                 interpret=_resolve(interpret))
 
 
 def flash_attention(q, k, v, *, causal: bool = True, bq: int = 256,
@@ -1075,6 +1085,373 @@ def maecho_sharded2d_apply_stacked(alpha, ctx, *, mesh,
     return maecho_sharded_apply_stacked(
         alpha, ctx, mesh=mesh, axis=axis_out, eta=eta, frac=frac,
         norm=norm, eps=eps, block=block, interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# client-chunked streaming pipeline: peak memory O(chunk), not O(N)
+# --------------------------------------------------------------------------
+def _slice_chunk(P, a: int, chunk: int):
+    """Client-chunk ``a`` of a stacked projector operand (dicts slice
+    leaf-wise: the factored kind stays factored through the chunking)."""
+    if isinstance(P, dict):
+        return {k: v[a * chunk:(a + 1) * chunk] for k, v in P.items()}
+    return P[a * chunk:(a + 1) * chunk]
+
+
+def _dyn_chunk(P, a, chunk: int):
+    """Client-chunk ``a`` (a TRACED loop index) via ``dynamic_slice``
+    — the loop-body form of :func:`_slice_chunk`.  Dynamic slicing is
+    what actually bounds memory: a statically-unrolled sweep lets XLA
+    CSE every chunk's residual into one live buffer each, rebuilding
+    the O(N) footprint the chunking exists to remove."""
+    def sl(x):
+        return jax.lax.dynamic_slice_in_dim(x, a * chunk, chunk, axis=0)
+    if isinstance(P, dict):
+        return {k: sl(v) for k, v in P.items()}
+    return sl(P)
+
+
+def _pad_clients(W, V, P, chunk: int, kind: str):
+    """Zero-pad the client axis to a ``chunk`` multiple.
+
+    Padded anchors are W itself — their residual (W − W)P is
+    identically zero whatever the projector — and padded projectors
+    are zeros (belt and braces; the Gram/apply crops never read them).
+    Exact for every pass, mirroring the ``_pad_to`` tile-padding
+    argument on the feature axes."""
+    N = V.shape[0]
+    pad = (-N) % chunk
+    if pad == 0:
+        return V, P
+    Vp = jnp.concatenate(
+        [V, jnp.broadcast_to(W[None], (pad,) + W.shape).astype(V.dtype)],
+        axis=0)
+    if kind == "factored":
+        Pp = {k: _pad_to(v, chunk, 0)[0] for k, v in P.items()}
+    else:
+        Pp = _pad_to(P, chunk, 0)[0]
+    return Vp, Pp
+
+
+def _chunked_resid(W, Va, Pa, kind: str):
+    """Rᵢ = (W − Vᵢ)Pᵢ for ONE client chunk, any projector kind, with
+    optional stacked-layer axes riding the einsum ellipsis.  This is
+    the only place the chunked pipeline materializes residual rows —
+    (chunk, […,] out, in) fp32, never the full client axis."""
+    delta = (W[None] - Va).astype(jnp.float32)
+    if kind == "full":
+        return jnp.einsum("n...oi,n...ij->n...oj", delta,
+                          Pa.astype(jnp.float32))
+    if kind == "diag":
+        return delta * Pa[..., None, :].astype(jnp.float32)
+    if kind == "scalar":
+        return delta * Pa[..., None, None].astype(jnp.float32)
+    U = Pa["U"].astype(jnp.float32)
+    A = (jnp.einsum("n...oi,n...ik->n...ok", delta, U)
+         * Pa["s"][..., None, :].astype(jnp.float32))
+    return jnp.einsum("n...ok,n...ik->n...oi", A, U)
+
+
+def _pair_jnp(stacked: bool):
+    """Chunk-pair contraction ⟨Rₐ, R_b⟩ on flat residual rows:
+    (ca, D) × (cb, D) -> (ca, cb), or (ca, L, D) × (cb, L, D) ->
+    (L, ca, cb) with the layer axis as a dot_general batch dim."""
+    if stacked:
+        return lambda Ra, Rb: jax.lax.dot_general(
+            Ra, Rb, (((2,), (2,)), ((1,), (1,))),
+            preferred_element_type=jnp.float32)
+    return lambda Ra, Rb: jax.lax.dot_general(
+        Ra, Rb, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _chunked_gram_core(W, Vp, Pp, kind: str, chunk: int, stacked: bool,
+                       pair):
+    """Triangular chunk-pair sweep: the (ncpad, ncpad) Gram assembled
+    from (chunk, chunk) blocks with at most TWO chunks' residuals
+    resident at any point.  Row chunk a's residual is computed once
+    and held across its inner sweep; the strict lower triangle is the
+    mirror of the upper (⟨Rₐ, R_b⟩ is symmetric under transpose) — the
+    recompute factor is (nc+1)/2 residual passes, all O(chunk) in
+    memory.  ``pair`` is the block contraction (jnp dot or the Pallas
+    ``maecho_gram_cross`` streamer).
+
+    The sweep is a ``fori_loop`` over DYNAMIC chunk indices rather
+    than a python unroll: unrolled, XLA common-subexpressions each
+    chunk's residual across its (nc) pair uses and keeps every one
+    live through the whole sweep — measured peak equal to the
+    unchunked path.  The loop + ``dynamic_slice`` form is opaque to
+    that hoist, so exactly Rₐ and R_b exist at any program point."""
+    nc = Vp.shape[0] // chunk
+    lead = 2 if stacked else 1
+
+    def resid(a):
+        """Flattened residual rows of (traced) chunk ``a``."""
+        Va = jax.lax.dynamic_slice_in_dim(Vp, a * chunk, chunk, axis=0)
+        R = _chunked_resid(W, Va, _dyn_chunk(Pp, a, chunk), kind)
+        return R.reshape(R.shape[:lead] + (-1,))
+
+    if nc == 1:                        # one chunk: no sweep, no loop
+        R0 = _chunked_resid(W, Vp, Pp, kind)
+        R0 = R0.reshape(R0.shape[:lead] + (-1,))
+        return pair(R0, R0)
+
+    npadc = nc * chunk
+    gshape = ((W.shape[0], npadc, npadc) if stacked
+              else (npadc, npadc))
+    zeros = (0,) if stacked else ()
+
+    def put(G, blk, a, b):
+        # diagonal blocks (a == b) write twice; ⟨Rₐ, Rₐ⟩ equals its
+        # own transpose bit-for-bit, so the second write is a no-op
+        G = jax.lax.dynamic_update_slice(
+            G, blk, zeros + (a * chunk, b * chunk))
+        return jax.lax.dynamic_update_slice(
+            G, jnp.swapaxes(blk, -1, -2),
+            zeros + (b * chunk, a * chunk))
+
+    def outer(a, G):
+        Ra = resid(a)
+
+        def inner(b, G):
+            return put(G, pair(Ra, resid(b)), a, b)
+
+        G = put(G, pair(Ra, Ra), a, a)
+        return jax.lax.fori_loop(a + 1, nc, inner, G)
+
+    return jax.lax.fori_loop(0, nc, outer,
+                             jnp.zeros(gshape, jnp.float32))
+
+
+def _chunked_apply_core(alpha, W, Vp, Pp, kind: str, chunk: int, N: int,
+                        stacked: bool, *, eta: float, frac: float,
+                        norm: bool, eps: float):
+    """Chunk-wise Eq. 7 + Eq. 11: the Eq. 7 delta accumulates over
+    chunk residuals of the ORIGINAL W (α zero-padded on dead clients),
+    then a second chunk sweep rebuilds each chunk's anchors from W' —
+    the full (N, out, in) residual never exists; the (N, …) V' output
+    is assembled from per-chunk pieces."""
+    nc = Vp.shape[0] // chunk
+    npad = nc * chunk - N
+    ap = alpha.astype(jnp.float32)
+    if npad:
+        widths = ((0, 0), (0, npad)) if stacked else ((0, npad),)
+        ap = jnp.pad(ap, widths)
+
+    def acc_body(a, acc):
+        Va = jax.lax.dynamic_slice_in_dim(Vp, a * chunk, chunk, axis=0)
+        Ra = _chunked_resid(W, Va, _dyn_chunk(Pp, a, chunk), kind)
+        aa = jax.lax.dynamic_slice_in_dim(ap, a * chunk, chunk,
+                                          axis=ap.ndim - 1)
+        if stacked:
+            return acc + jnp.einsum("la,al...->l...", aa, Ra)
+        return acc + jnp.einsum("a,a...->...", aa, Ra)
+
+    # same dynamic-index loops as the gram sweep (see
+    # _chunked_gram_core): unrolled chunks get CSE'd into full-N
+    # residency
+    acc = jax.lax.fori_loop(0, nc, acc_body,
+                            jnp.zeros(W.shape, jnp.float32))
+    W_new = (W.astype(jnp.float32) - 2.0 * eta * acc).astype(W.dtype)
+
+    def v_chunk(Va, Pa):
+        delta = (W_new[None] - Va).astype(jnp.float32)
+        Un = delta - frac * _chunked_resid(W_new, Va, Pa, kind)
+        if norm:
+            nrm = jnp.linalg.norm(Un, axis=-1, keepdims=True)
+            Un = Un / jnp.maximum(nrm, eps)
+        return (Va.astype(jnp.float32) + Un).astype(Vp.dtype)
+
+    if nc == 1:
+        return W_new, v_chunk(Vp, Pp)[:N]
+
+    def v_body(a, Vout):
+        Va = jax.lax.dynamic_slice_in_dim(Vp, a * chunk, chunk, axis=0)
+        vn = v_chunk(Va, _dyn_chunk(Pp, a, chunk))
+        return jax.lax.dynamic_update_slice_in_dim(Vout, vn, a * chunk,
+                                                   axis=0)
+
+    Vout = jax.lax.fori_loop(0, nc, v_body, jnp.zeros_like(Vp))
+    return W_new, Vout[:N]
+
+
+def _cross_pair(bd: int, itp: bool):
+    """Pair contraction through the Pallas ``maecho_gram_cross``
+    streamer (kernel-route leaves): flat rows are zero-padded to a
+    ``bd`` multiple — zero feature columns add zero to every dot."""
+    def pair(Ra, Rb):
+        return _mg.maecho_gram_cross(_pad_to(Ra, bd, 1)[0],
+                                     _pad_to(Rb, bd, 1)[0],
+                                     bd=bd, interpret=itp)
+    return pair
+
+
+def maecho_streaming_gram_chunked(W, V, P, *, chunk: int,
+                                  use_kernel: bool = False,
+                                  bd: int = 512, interpret=None):
+    """Client-chunked gram half: same ``(G, ctx)`` contract as
+    :func:`maecho_streaming_gram`, but the (N, N) Gram accumulates
+    over client chunks — peak residual residency is O(chunk·out·in),
+    not O(N·out·in), which is what lets one aggregation span
+    cross-device cohorts (N in the thousands).  With ``use_kernel``
+    the (chunk, chunk) pair blocks stream through the Pallas
+    ``maecho_gram_cross`` kernel (the ``rank_update`` tiled-accumulator
+    idiom); otherwise a jnp dot — bit-identical math either way.
+    Layout "oi"; exactness of the client padding lives in
+    :func:`_pad_clients`."""
+    N = V.shape[0]
+    kind = _proj_kind(P)
+    Vp, Pp = _pad_clients(W, V, P, chunk, kind)
+    pair = (_cross_pair(bd, _resolve(interpret)) if use_kernel
+            else _pair_jnp(False))
+    G = _chunked_gram_core(W, Vp, Pp, kind, chunk, False, pair)
+    return G[:N, :N], ("chunk", kind, W, Vp, Pp, N, chunk)
+
+
+def maecho_streaming_apply_chunked(alpha, ctx, *, eta: float = 1.0,
+                                   frac: float = 0.5,
+                                   norm: bool = False,
+                                   eps: float = 1e-12):
+    """Chunked update half on the context from
+    :func:`maecho_streaming_gram_chunked`.  Returns ``(W', V')`` with
+    the client axis cropped back to N."""
+    _, kind, W, Vp, Pp, N, chunk = ctx
+    return _chunked_apply_core(alpha, W, Vp, Pp, kind, chunk, N, False,
+                               eta=eta, frac=frac, norm=norm, eps=eps)
+
+
+def maecho_streaming_gram_chunked_stacked(W, V, P, *, chunk: int,
+                                          interpret=None):
+    """Stacked client-chunked gram half: W (L, out, in),
+    V (N, L, out, in), P stacked per kind.  Returns the (L, N, N)
+    Gram stack accumulated over client chunks (pair blocks batch the
+    layer axis through one dot_general) plus the apply context."""
+    del interpret                      # jnp contraction path
+    N = V.shape[0]
+    kind = _proj_kind_stacked(P)
+    Vp, Pp = _pad_clients(W, V, P, chunk, kind)
+    G = _chunked_gram_core(W, Vp, Pp, kind, chunk, True,
+                           _pair_jnp(True))
+    return G[:, :N, :N], ("stkc", kind, W, Vp, Pp, N, chunk)
+
+
+def maecho_streaming_apply_chunked_stacked(alpha, ctx, *,
+                                           eta: float = 1.0,
+                                           frac: float = 0.5,
+                                           norm: bool = False,
+                                           eps: float = 1e-12):
+    """Stacked chunked update half; ``alpha`` is the (L, N) per-layer
+    solve stack."""
+    _, kind, W, Vp, Pp, N, chunk = ctx
+    return _chunked_apply_core(alpha, W, Vp, Pp, kind, chunk, N, True,
+                               eta=eta, frac=frac, norm=norm, eps=eps)
+
+
+def maecho_sharded_gram_chunked(W, V, P, *, mesh, axis="data",
+                                chunk: int, stacked: bool = False,
+                                block: int = DEFAULT_BLOCK,
+                                interpret=None):
+    """Out-dim-sharded client-chunked gram half.
+
+    The two memory axes compose: each device owns an out-row shard
+    (padded to ``block × axis_size`` rows like the unchunked sharded
+    pipeline) AND sweeps the client axis in chunks, so per-device
+    residual residency is O(chunk · out/axis_size · in).  One ``psum``
+    over ``axis`` reconstructs the replicated Gram — the chunk loop
+    adds no collectives.  ``stacked`` selects the (L, out, in) layout
+    with the per-layer (L, N, N) Gram stack."""
+    del interpret                      # jnp contraction inside the shard
+    names = _axis_names(axis)
+    asz = axis_size_of(mesh, axis)
+    kind = _proj_kind_stacked(P) if stacked else _proj_kind(P)
+    N = V.shape[0]
+    oax = 1 if stacked else 0
+    out_d, in_d = W.shape[-2:]
+    Wp = _pad_to(W, block * asz, oax)[0]
+    Vr = _pad_to(V, block * asz, oax + 1)[0]
+    Vp, Pp = _pad_clients(Wp, Vr, P, chunk, kind)
+    pair = _pair_jnp(stacked)
+    if stacked:
+        wspec = PartitionSpec(None, names, None)
+        vspec = PartitionSpec(None, None, names, None)
+        gspec = PartitionSpec(None, None, None)
+    else:
+        wspec = PartitionSpec(names, None)
+        vspec = PartitionSpec(None, names, None)
+        gspec = PartitionSpec(None, None)
+
+    def rep(x):
+        return PartitionSpec(*([None] * x.ndim))
+
+    if kind == "factored":
+        pargs = (Pp["U"], Pp["s"])
+        pspecs = (rep(Pp["U"]), rep(Pp["s"]))
+
+        def rebuild(U, s):
+            return {"U": U, "s": s}
+    else:
+        pargs = (Pp,)
+        pspecs = (rep(Pp),)
+
+        def rebuild(p):
+            return p
+
+    def body(Wl, Vl, *ps):
+        Gl = _chunked_gram_core(Wl, Vl, rebuild(*ps), kind, chunk,
+                                stacked, pair)
+        return jax.lax.psum(Gl, names)
+
+    G = shard_map(body, mesh=mesh, in_specs=(wspec, vspec) + pspecs,
+                  out_specs=gspec, check_rep=False)(Wp, Vp, *pargs)
+    return (G[..., :N, :N],
+            ("shc", kind, Wp, Vp, Pp, N, chunk, out_d, in_d))
+
+
+def maecho_sharded_apply_chunked(alpha, ctx, *, mesh, axis="data",
+                                 stacked: bool = False,
+                                 eta: float = 1.0, frac: float = 0.5,
+                                 norm: bool = False, eps: float = 1e-12):
+    """Sharded chunked update half: Eq. 7 + Eq. 11 run row-local on
+    each device's owned out-rows, chunk-swept over clients — zero
+    collectives (the gram psum is the iteration's only one).  Returns
+    ``(W', V')`` cropped to the original out/in dims."""
+    _, kind, Wp, Vp, Pp, N, chunk, out_d, in_d = ctx
+    names = _axis_names(axis)
+    if stacked:
+        wspec = PartitionSpec(None, names, None)
+        vspec = PartitionSpec(None, None, names, None)
+    else:
+        wspec = PartitionSpec(names, None)
+        vspec = PartitionSpec(None, names, None)
+
+    def rep(x):
+        return PartitionSpec(*([None] * x.ndim))
+
+    if kind == "factored":
+        pargs = (Pp["U"], Pp["s"])
+        pspecs = (rep(Pp["U"]), rep(Pp["s"]))
+
+        def rebuild(U, s):
+            return {"U": U, "s": s}
+    else:
+        pargs = (Pp,)
+        pspecs = (rep(Pp),)
+
+        def rebuild(p):
+            return p
+
+    def body(a, Wl, Vl, *ps):
+        return _chunked_apply_core(a, Wl, Vl, rebuild(*ps), kind, chunk,
+                                   N, stacked, eta=eta, frac=frac,
+                                   norm=norm, eps=eps)
+
+    Wn, Vn = shard_map(body, mesh=mesh,
+                       in_specs=(rep(alpha), wspec, vspec) + pspecs,
+                       out_specs=(wspec, vspec),
+                       check_rep=False)(alpha, Wp, Vp, *pargs)
+    if stacked:
+        return Wn[:, :out_d, :in_d], Vn[:, :, :out_d, :in_d]
+    return Wn[:out_d, :in_d], Vn[:, :out_d, :in_d]
 
 
 def flash_attention_auto(q, k, v, *, causal: bool = True, bq: int = 256,

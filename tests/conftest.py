@@ -14,6 +14,7 @@ Markers:
 import pathlib
 import sys
 
+import jax
 import numpy as np
 import pytest
 
@@ -36,6 +37,23 @@ def pytest_configure(config):
         "markers",
         "slow: heavy model-zoo smoke / sweep tests; deselect with "
         "-m \"not slow\" for a fast inner loop (tier-1 runs all)")
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _release_compiled_executables():
+    """Drop JAX's jit caches after each test module.
+
+    Every XLA:CPU executable pins a handful of ``mmap`` regions for its
+    code pages.  A full-suite run in a single process accumulates tens
+    of thousands of mappings and eventually crosses the kernel's
+    ``vm.max_map_count`` ceiling (65530 by default) — at which point the
+    next compile's ``mmap`` fails and XLA segfaults mid-suite.  Clearing
+    at module boundaries bounds the live-map count to the heaviest
+    single module; cross-module cache reuse is negligible because each
+    module compiles its own shapes.
+    """
+    yield
+    jax.clear_caches()
 
 
 @pytest.fixture(scope="session")

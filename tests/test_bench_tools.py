@@ -193,6 +193,93 @@ def test_no_suites_discovered_is_not_a_failure(tmp_path):
 
 
 # --------------------------------------------------------------------------
+# peak_bytes: rows carrying a memory metric are gated on BOTH axes
+# --------------------------------------------------------------------------
+def _prow(name, us, peak):
+    return {"name": name, "us_per_call": us, "derived": "",
+            "peak_bytes": peak}
+
+
+def test_common_row_carries_peak_bytes_only_when_given():
+    common.drain_rows()
+    common.row("s/time_only", 100, "")
+    common.row("s/with_peak", 100, "", peak_bytes=2 ** 20)
+    rows = common.drain_rows()
+    assert "peak_bytes" not in rows[0]
+    assert rows[1]["peak_bytes"] == 2 ** 20
+
+
+def test_load_latest_rows_mixed_shapes(tmp_path):
+    chk = _load_checker()
+    _write_bench(tmp_path, "foo", [_row("foo/t", 500),
+                                   _prow("foo/m", 600, 1 << 20)])
+    rows = chk.load_latest_rows(
+        os.path.join(tmp_path, "BENCH_foo.json"))
+    assert rows["foo/t"] == 500
+    assert rows["foo/m"] == {"us_per_call": 600,
+                             "peak_bytes": 1 << 20}
+
+
+def test_gate_fails_on_peak_regression(tmp_path):
+    """+20% peak_bytes with flat wall-clock fails the gate exactly
+    like a slowdown."""
+    chk = _load_checker()
+    _write_bench(tmp_path, "foo", [_prow("foo/m", 1000, 1200)])
+    baseline = tmp_path / "baselines.json"
+    baseline.write_text(json.dumps(
+        {"foo": {"foo/m": {"us_per_call": 1000,
+                           "peak_bytes": 1000}}}))
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(baseline)])
+    assert rc == 1
+
+
+def test_gate_peak_within_threshold_passes(tmp_path):
+    chk = _load_checker()
+    _write_bench(tmp_path, "foo", [_prow("foo/m", 1000, 1100)])
+    baseline = tmp_path / "baselines.json"
+    baseline.write_text(json.dumps(
+        {"foo": {"foo/m": {"us_per_call": 1000,
+                           "peak_bytes": 1000}}}))
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(baseline)])
+    assert rc == 0                          # +10% < 15% threshold
+
+
+def test_gate_peak_not_gated_against_legacy_int_baseline(tmp_path):
+    """A row that newly grew a peak_bytes metric against a time-only
+    (legacy int) baseline is gated on time alone — no phantom memory
+    regression until the baseline records a peak."""
+    chk = _load_checker()
+    _write_bench(tmp_path, "foo", [_prow("foo/m", 1000, 9 << 30)])
+    baseline = tmp_path / "baselines.json"
+    baseline.write_text(json.dumps({"foo": {"foo/m": 1000}}))
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(baseline)])
+    assert rc == 0
+
+
+def test_update_baseline_preserves_row_shapes(tmp_path):
+    """--update-baseline writes dict rows where peak_bytes exists and
+    keeps the legacy plain-int shape everywhere else — then gates
+    clean against itself."""
+    chk = _load_checker()
+    _write_bench(tmp_path, "foo", [_row("foo/t", 2000),
+                                   _prow("foo/m", 3000, 1 << 20)])
+    baseline = tmp_path / "baselines.json"
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(baseline), "--update-baseline"])
+    assert rc == 0
+    assert json.loads(baseline.read_text()) == {
+        "foo": {"foo/t": 2000,
+                "foo/m": {"us_per_call": 3000,
+                          "peak_bytes": 1 << 20}}}
+    rc = chk.main(["--bench-dir", str(tmp_path),
+                   "--baseline", str(baseline)])
+    assert rc == 0
+
+
+# --------------------------------------------------------------------------
 # --check-registered: PERF_SUITES registry vs baseline entries
 # --------------------------------------------------------------------------
 def _write_registry(tmp_path, suites):

@@ -1,0 +1,316 @@
+"""Client-chunked aggregation (ISSUE 10 tentpole): end-to-end
+chunked-vs-unchunked parity across the property space, the ragged
+``client_mask`` × chunk-boundary edge cases, the blocked capped-simplex
+QP, the plan-layer ``client_chunk`` contracts (clamping, memoization,
+the sharded2d degrade), and the two-tier hierarchical mode — mirroring
+``tests/test_stacked_agg.py``'s contract style.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+import strategies as strat
+from repro.core import qp
+from repro.core.maecho import (MAEchoConfig, dispatch_summary,
+                               maecho_aggregate)
+from repro.core.plan import compile_plan
+from repro.fl.rounds import maecho_aggregate_hierarchical
+from repro.kernels import ops, ref
+
+CFG = MAEchoConfig(tau=2, eta=0.5, qp_iters=60)
+
+
+def _chunked(cfg, chunk):
+    return dataclasses.replace(cfg, client_chunk=chunk)
+
+
+def _assert_tree_close(a, b, atol=2e-3):
+    for (pa, la), (pb, lb) in zip(
+            jax.tree_util.tree_leaves_with_path(a),
+            jax.tree_util.tree_leaves_with_path(b)):
+        np.testing.assert_allclose(
+            np.asarray(la), np.asarray(lb), atol=atol, rtol=1e-3,
+            err_msg=f"leaf {pa}")
+
+
+# --------------------------------------------------------------------------
+# end-to-end property parity: chunked == unchunked per backend
+# --------------------------------------------------------------------------
+@given(strat.seeds(), strat.n_clients(), strat.kinds(),
+       strat.conventions(), strat.shapes(), strat.masked())
+@settings(max_examples=6, deadline=None)
+def test_chunked_aggregate_parity(seed, n, kind, convention, shape,
+                                  use_mask):
+    clients, projs, levels, mask = strat.build_case(
+        seed, n, kind, convention, (), shape, use_mask)
+    want = maecho_aggregate(clients, projs, CFG,
+                            convention=convention,
+                            stack_levels=levels, client_mask=mask)
+    got = maecho_aggregate(clients, projs, _chunked(CFG, 2),
+                           convention=convention,
+                           stack_levels=levels, client_mask=mask)
+    _assert_tree_close(got, want)
+
+
+@given(strat.seeds(), strat.n_clients(), strat.kinds(),
+       strat.leads(), strat.masked())
+@settings(max_examples=5, deadline=None)
+def test_chunked_aggregate_parity_stacked(seed, n, kind, lead,
+                                          use_mask):
+    clients, projs, levels, mask = strat.build_case(
+        seed, n, kind, "oi", lead, (128, 128), use_mask)
+    want = maecho_aggregate(clients, projs, CFG,
+                            stack_levels=levels, client_mask=mask)
+    got = maecho_aggregate(clients, projs, _chunked(CFG, 2),
+                           stack_levels=levels, client_mask=mask)
+    _assert_tree_close(got, want)
+
+
+@pytest.mark.parametrize("backend", ["kernel", "auto"])
+def test_chunked_parity_fast_backends(backend):
+    """Chunking composes with the kernel/auto routes — same result as
+    the unchunked oracle path."""
+    clients, projs, levels, mask = strat.build_case(
+        7, 4, "factored", "oi", (), (256, 140), True)
+    want = maecho_aggregate(clients, projs, CFG, stack_levels=levels,
+                            client_mask=mask)
+    got = maecho_aggregate(clients, projs, _chunked(CFG, 2),
+                           stack_levels=levels, backend=backend,
+                           client_mask=mask)
+    _assert_tree_close(got, want)
+
+
+# --------------------------------------------------------------------------
+# client_mask × chunk-boundary edge cases
+# --------------------------------------------------------------------------
+def _mask_case(n, seed=11, shape=(48, 64)):
+    return strat.build_case(seed, n, "full", "oi", (), shape, False)
+
+
+@pytest.mark.parametrize("mask,n,chunk", [
+    # chunk 0 keeps a single participant
+    ([True, False, False, True, True, True], 6, 2),
+    # chunk 1 is fully absent (both its clients masked out)
+    ([True, True, False, False, True, True], 6, 2),
+    # chunk boundary does not divide N (last chunk is ragged) AND the
+    # ragged tail chunk is fully absent
+    ([True, True, True, True, False], 5, 2),
+    # everything at once: ragged tail, dead middle chunk, singleton
+    ([True, False, False, False, True, True, False], 7, 3),
+])
+def test_chunked_mask_edges(mask, n, chunk):
+    """Dead chunks (α=0 via the mask), singleton chunks and ragged
+    tails all reproduce the unchunked masked aggregate — including the
+    anchors: a masked client's anchor must stay frozen through the
+    chunked Eq. 11 sweep exactly as through the unchunked one."""
+    clients, projs, levels, _ = _mask_case(n)
+    mask = np.asarray(mask)
+    want_w, want_v = maecho_aggregate(
+        clients, projs, CFG, stack_levels=levels, client_mask=mask,
+        return_anchors=True)
+    got_w, got_v = maecho_aggregate(
+        clients, projs, _chunked(CFG, chunk), stack_levels=levels,
+        client_mask=mask, return_anchors=True)
+    _assert_tree_close(got_w, want_w)
+    _assert_tree_close(got_v, want_v)
+
+
+def test_chunk_larger_than_n_is_identity():
+    """chunk ≥ N clamps to N — one chunk, same numbers, and the plan
+    records the clamped value."""
+    clients, projs, levels, _ = _mask_case(4)
+    want = maecho_aggregate(clients, projs, CFG, stack_levels=levels)
+    got = maecho_aggregate(clients, projs, _chunked(CFG, 64),
+                           stack_levels=levels)
+    _assert_tree_close(got, want)
+
+
+# --------------------------------------------------------------------------
+# ops-level: the fori_loop sweep really bounds residual liveness
+# --------------------------------------------------------------------------
+def test_chunked_gram_peak_memory_bounded():
+    """The compiled chunked gram's temp footprint stays well under the
+    full-residual footprint — the regression mode where a static
+    unroll lets XLA CSE every chunk residual back to O(N) liveness."""
+    N, out_d, in_d, chunk = 64, 128, 128, 8
+    k = jax.random.PRNGKey(0)
+    W = jax.random.normal(k, (out_d, in_d)) * 0.3
+    V = jax.random.normal(jax.random.fold_in(k, 1),
+                          (N, out_d, in_d)) * 0.3
+    P = jax.random.uniform(jax.random.fold_in(k, 2), (N, in_d))
+
+    def chunked(W, V, P):
+        return ops.maecho_streaming_gram_chunked(W, V, P,
+                                                 chunk=chunk)[0]
+
+    mem = jax.jit(chunked).lower(W, V, P).compile().memory_analysis()
+    full_resid = N * out_d * in_d * 4
+    # 2 chunk residuals + the Gram carry + slack; full-N liveness
+    # would be ≥ full_resid
+    assert int(mem.temp_size_in_bytes) < full_resid // 2, (
+        f"chunked gram temp {int(mem.temp_size_in_bytes)}B is not "
+        f"O(chunk) (full residual = {full_resid}B)")
+    np.testing.assert_allclose(
+        np.asarray(chunked(W, V, P)),
+        np.asarray(ref.maecho_gram_ref(W, V, P)),
+        atol=1e-2, rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# blocked capped-simplex QP
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n,rb", [(5, 2), (8, 3), (16, 16), (12, 64),
+                                  (17, 7)])
+@pytest.mark.parametrize("use_mask", [False, True])
+def test_solve_qp_blocked_parity(n, rb, use_mask):
+    k = jax.random.PRNGKey(n * 31 + rb)
+    X = jax.random.normal(k, (n, n + 3)) * 0.5
+    G = X @ X.T + 0.1 * jnp.eye(n)
+    mask = None
+    if use_mask:
+        mask = jnp.asarray(
+            np.arange(n) % 3 != 1, jnp.float32)
+    want = qp.solve_qp(G, 0.6, iters=200, mask=mask)
+    got = qp.solve_qp_blocked(G, 0.6, iters=200, mask=mask,
+                              row_block=rb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5)
+    # solve_qp's row_block kwarg routes to the same blocked PGD
+    got2 = qp.solve_qp(G, 0.6, iters=200, mask=mask, row_block=rb)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(want),
+                               atol=1e-5)
+
+
+def test_solve_qp_batched_row_block_parity():
+    k = jax.random.PRNGKey(3)
+    X = jax.random.normal(k, (4, 9, 12)) * 0.5
+    G = jnp.einsum("bnd,bmd->bnm", X, X) + 0.1 * jnp.eye(9)
+    want = qp.solve_qp_batched(G, 0.6, iters=150)
+    got = qp.solve_qp_batched(G, 0.6, iters=150, row_block=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# plan layer: client_chunk field, clamping, memoization, sharded2d
+# --------------------------------------------------------------------------
+def _plan_args(n=4, chunk=0):
+    W0 = {"W": jnp.zeros((256, 128)), "b": jnp.zeros((256,))}
+    Pp = {"W": jnp.zeros((n, 128, 128)), "b": jnp.zeros((n,))}
+    levels = {"W": 0, "b": 0}
+    cfg = MAEchoConfig(tau=2, client_chunk=chunk)
+    return W0, Pp, levels, cfg
+
+
+def test_plan_records_clamped_chunk():
+    W0, Pp, levels, cfg = _plan_args(n=4, chunk=64)
+    plan = compile_plan(W0, Pp, levels, cfg, "oi", "kernel", None)
+    by_path = {lp.path: lp for lp in plan.leaves}
+    assert by_path["W"].client_chunk == 4        # clamped to N
+    assert by_path["b"].client_chunk == 0        # bias never chunks
+
+
+def test_plan_memoizes_on_chunk():
+    W0, Pp, levels, cfg = _plan_args(n=4, chunk=2)
+    p1 = compile_plan(W0, Pp, levels, cfg, "oi", "kernel", None)
+    p2 = compile_plan(W0, Pp, levels, cfg, "oi", "kernel", None)
+    assert p1 is p2
+    cfg0 = dataclasses.replace(cfg, client_chunk=0)
+    p3 = compile_plan(W0, Pp, levels, cfg0, "oi", "kernel", None)
+    assert p3 is not p1
+    assert all(lp.client_chunk == 0 for lp in p3.leaves)
+
+
+def test_sharded2d_with_chunk_degrades_with_warning():
+    """backend='sharded2d' + client_chunk has no composed kernel: the
+    plan degrades the leaf to the 1-D out-dim shard and says so."""
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    # n=6/chunk=3 keeps the (deduped) warning message unique to this
+    # test across the session
+    W0, Pp, levels, cfg = _plan_args(n=6, chunk=3)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        plan = compile_plan(W0, Pp, levels, cfg, "oi", "sharded2d",
+                            mesh)
+    assert any("does not compose with client chunking" in str(w.message)
+               for w in rec)
+    assert all(lp.route != "sharded2d" for lp in plan.leaves)
+    by_path = {lp.path: lp for lp in plan.leaves}
+    assert by_path["W"].client_chunk == 3        # chunk survives
+
+
+def test_dispatch_summary_counts_chunked():
+    W0, Pp, levels, cfg = _plan_args(n=4, chunk=2)
+    _, counts = dispatch_summary(W0, Pp, levels, cfg, "oi", "kernel",
+                                 None)
+    assert counts.get("chunked") == 1
+    _, counts0 = dispatch_summary(
+        W0, Pp, levels, dataclasses.replace(cfg, client_chunk=0),
+        "oi", "kernel", None)
+    assert "chunked" not in counts0
+
+
+# --------------------------------------------------------------------------
+# hierarchical two-tier aggregation
+# --------------------------------------------------------------------------
+def test_hierarchical_single_group_is_flat():
+    """group_size ≥ N collapses to one tier-1 group whose result is
+    returned unchanged — exact parity with the flat aggregate."""
+    clients, projs, levels, _ = _mask_case(5)
+    flat = maecho_aggregate(clients, projs, CFG, stack_levels=levels)
+    hier = maecho_aggregate_hierarchical(
+        clients, projs, CFG, group_size=8, stack_levels=levels)
+    for key in flat:
+        np.testing.assert_array_equal(np.asarray(flat[key]),
+                                      np.asarray(hier[key]))
+
+
+def test_hierarchical_dead_group_equals_reduced_flat():
+    """A group whose clients are all masked out contributes nothing;
+    with only one surviving group the result equals the flat aggregate
+    of just that group's clients."""
+    clients, projs, levels, _ = _mask_case(4)
+    mask = np.asarray([True, True, False, False])
+    hier = maecho_aggregate_hierarchical(
+        clients, projs, CFG, group_size=2, stack_levels=levels,
+        client_mask=mask)
+    flat = maecho_aggregate(clients[:2], projs[:2], CFG,
+                            stack_levels=levels)
+    for key in flat:
+        np.testing.assert_array_equal(np.asarray(flat[key]),
+                                      np.asarray(hier[key]))
+
+
+def test_hierarchical_two_tier_runs_and_composes_with_chunking():
+    clients, projs, levels, _ = _mask_case(6)
+    mask = np.asarray([True, True, True, False, True, True])
+    out = maecho_aggregate_hierarchical(
+        clients, projs, _chunked(CFG, 2), group_size=2,
+        stack_levels=levels, client_mask=mask,
+        tier2_cfg=dataclasses.replace(CFG, tau=1))
+    for key, leaf in out.items():
+        assert np.all(np.isfinite(np.asarray(leaf))), key
+        assert leaf.shape == clients[0][key].shape
+
+
+def test_hierarchical_rejects_bad_inputs():
+    clients, projs, levels, _ = _mask_case(4)
+    with pytest.raises(ValueError, match="group_size"):
+        maecho_aggregate_hierarchical(clients, projs, CFG,
+                                      group_size=0)
+    with pytest.raises(ValueError, match="client_mask"):
+        maecho_aggregate_hierarchical(
+            clients, projs, CFG, group_size=2,
+            client_mask=np.asarray([True, False]))
+    with pytest.raises(ValueError, match="excludes every client"):
+        maecho_aggregate_hierarchical(
+            clients, projs, CFG, group_size=2,
+            client_mask=np.zeros(4, bool))

@@ -239,9 +239,9 @@ def test_one_qp_solve_per_outer_iteration(monkeypatch):
     calls = []
     orig = qp_mod.solve_qp_batched
 
-    def counting(G, C, iters=300, n_valid=None):
+    def counting(G, C, iters=300, n_valid=None, **kw):
         calls.append(tuple(G.shape))
-        return orig(G, C, iters, n_valid)
+        return orig(G, C, iters, n_valid, **kw)
 
     monkeypatch.setattr(qp_mod, "solve_qp_batched", counting)
     # unusual shapes -> guaranteed fresh trace (tau <= 4 unrolls, so
@@ -262,9 +262,9 @@ def test_sequential_path_skips_batched_solver(monkeypatch):
     calls = []
     orig = qp_mod.solve_qp_batched
 
-    def counting(G, C, iters=300, n_valid=None):
+    def counting(G, C, iters=300, n_valid=None, **kw):
         calls.append(tuple(G.shape))
-        return orig(G, C, iters, n_valid)
+        return orig(G, C, iters, n_valid, **kw)
 
     monkeypatch.setattr(qp_mod, "solve_qp_batched", counting)
     clients = _clients(3, shape=(11, 5), seed0=77)

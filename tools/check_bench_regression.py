@@ -5,7 +5,10 @@ against the committed baseline (``benchmarks/baselines.json``) and
 exits non-zero when any row slowed down more than ``--threshold``
 percent (default 15) — the ROADMAP's "fail a PR when a row slows down
 >X%" item.  Rows faster than ``--min-us`` (default 100µs) are skipped:
-at that scale dispatch jitter swamps any real signal.
+at that scale dispatch jitter swamps any real signal.  Rows that
+record a ``peak_bytes`` metric (the memory benches) are gated on it
+too, with the same +threshold% rule — a memory regression fails the
+PR exactly like a slowdown.
 
 Usage::
 
@@ -66,8 +69,14 @@ def registered_perf_suites(registry_path: str) -> list[str]:
 
 
 def load_latest_rows(bench_path: str,
-                     allow_quick: bool = False) -> dict[str, int]:
-    """name -> us_per_call from the newest full run of a bench file.
+                     allow_quick: bool = False) -> dict:
+    """name -> metrics from the newest full run of a bench file.
+
+    Rows carrying only a time come back as a plain ``int``
+    us_per_call (the legacy shape every existing baseline uses); rows
+    that also recorded a ``peak_bytes`` come back as
+    ``{"us_per_call": int, "peak_bytes": int}`` so the gate can check
+    both metrics.
 
     ``--quick`` runs shrink the workloads without renaming the rows,
     so comparing them against a full-run baseline is meaningless —
@@ -81,7 +90,26 @@ def load_latest_rows(bench_path: str,
         runs = [r for r in runs if not r.get("quick")]
     if not runs:
         return {}
-    return {r["name"]: int(r["us_per_call"]) for r in runs[-1]["rows"]}
+    out = {}
+    for r in runs[-1]["rows"]:
+        if r.get("peak_bytes") is not None:
+            out[r["name"]] = {"us_per_call": int(r["us_per_call"]),
+                              "peak_bytes": int(r["peak_bytes"])}
+        else:
+            out[r["name"]] = int(r["us_per_call"])
+    return out
+
+
+def _row_us(v) -> int:
+    """us_per_call of a row value in either shape (int or dict)."""
+    return int(v["us_per_call"]) if isinstance(v, dict) else int(v)
+
+
+def _row_peak(v):
+    """peak_bytes of a row value, or None for time-only rows."""
+    if isinstance(v, dict) and v.get("peak_bytes") is not None:
+        return int(v["peak_bytes"])
+    return None
 
 
 def discover_suites(bench_dir: str) -> list[str]:
@@ -90,28 +118,44 @@ def discover_suites(bench_dir: str) -> list[str]:
         for p in glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
 
 
-def compare(current: dict[str, int], baseline: dict[str, int],
+def compare(current: dict, baseline: dict,
             threshold: float, min_us: float) -> list[str]:
-    """Returns the list of regression messages (empty = pass)."""
+    """Returns the list of regression messages (empty = pass).
+
+    Row values are either a plain ``int`` us_per_call or a
+    ``{"us_per_call", "peak_bytes"}`` dict; time is always gated, and
+    ``peak_bytes`` is additionally gated (same +threshold%) whenever
+    BOTH sides carry it — a memory regression fails the gate exactly
+    like a slowdown."""
     regressions = []
-    for name, us in sorted(current.items()):
-        base = baseline.get(name)
-        if base is None:
-            print(f"  new row (not gated): {name} = {us}us")
+    for name, cur in sorted(current.items()):
+        if name not in baseline:
+            print(f"  new row (not gated): {name} = {_row_us(cur)}us")
             continue
-        if max(base, us) < min_us:
+        base = baseline[name]
+        us, base_us = _row_us(cur), _row_us(base)
+        if max(base_us, us) >= min_us:
             # jitter band only when BOTH sides are tiny — a row that
             # jumps from 40us to 40000us is a real regression
-            continue
-        pct = (us - base) / base * 100.0
-        marker = "REGRESSION" if pct > threshold else "ok"
-        print(f"  {marker:>10}  {name}: {base}us -> {us}us "
-              f"({pct:+.1f}%)")
-        if pct > threshold:
-            # row names already carry the suite prefix
-            regressions.append(
-                f"{name}: {base}us -> {us}us ({pct:+.1f}% "
-                f"> +{threshold:.0f}%)")
+            pct = (us - base_us) / base_us * 100.0
+            marker = "REGRESSION" if pct > threshold else "ok"
+            print(f"  {marker:>10}  {name}: {base_us}us -> {us}us "
+                  f"({pct:+.1f}%)")
+            if pct > threshold:
+                # row names already carry the suite prefix
+                regressions.append(
+                    f"{name}: {base_us}us -> {us}us ({pct:+.1f}% "
+                    f"> +{threshold:.0f}%)")
+        peak, base_peak = _row_peak(cur), _row_peak(base)
+        if peak is not None and base_peak:
+            pct = (peak - base_peak) / base_peak * 100.0
+            marker = "REGRESSION" if pct > threshold else "ok"
+            print(f"  {marker:>10}  {name}: {base_peak}B -> {peak}B "
+                  f"({pct:+.1f}% peak)")
+            if pct > threshold:
+                regressions.append(
+                    f"{name}: {base_peak}B -> {peak}B ({pct:+.1f}% "
+                    f"peak_bytes > +{threshold:.0f}%)")
     for name in sorted(set(baseline) - set(current)):
         print(f"  retired row (not gated): {name}")
     return regressions
